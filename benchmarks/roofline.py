@@ -1,0 +1,59 @@
+"""Roofline summary: aggregates the dry-run JSON records
+(experiments/dryrun/*.json) into the EXPERIMENTS.md §Roofline table."""
+from __future__ import annotations
+
+import json
+import os
+import glob
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load(dirname: str = DRYRUN_DIR) -> list[dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs: list[dict], mesh: str = "16x16",
+          profile: str = "baseline") -> list[dict]:
+    rows = []
+    for r in recs:
+        if r["mesh"] != mesh or r.get("profile", "baseline") != profile:
+            continue
+        roof = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_ms": roof["compute_s"] * 1e3,
+            "memory_ms": roof["memory_s"] * 1e3,
+            "collective_ms": roof["collective_s"] * 1e3,
+            "dominant": roof["dominant"],
+            "mem_gib": r["memory"]["peak_bytes_per_device"] / 2 ** 30,
+            "useful": r["useful_flops_ratio"],
+        })
+    return rows
+
+
+def main(csv=print):
+    recs = load()
+    if not recs:
+        csv("roofline/no_records,0,run repro.launch.dryrun first")
+        return []
+    rows = table(recs)
+    for r in rows:
+        csv(f"roofline/{r['arch']}/{r['shape']},0,"
+            f"compute_ms={r['compute_ms']:.2f};memory_ms={r['memory_ms']:.2f};"
+            f"coll_ms={r['collective_ms']:.2f};dom={r['dominant']};"
+            f"mem_gib={r['mem_gib']:.2f};useful={r['useful'] or 0:.3f}")
+    doms = {}
+    for r in rows:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    csv(f"roofline/dominant_counts,0,{doms}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Benchmark harness — one module per paper table + the roofline summary.
+
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run            # all tables
+  PYTHONPATH=src python -m benchmarks.run table3     # one table
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    want = sys.argv[1:] or ["table1", "table2", "table3", "roofline"]
+    from benchmarks import (table1_profiling, table2_stop_restart,
+                            table3_scheduler_sim, roofline)
+    mods = {"table1": table1_profiling, "table2": table2_stop_restart,
+            "table3": table3_scheduler_sim, "roofline": roofline}
+    print("name,us_per_call,derived")
+    for name in want:
+        t0 = time.perf_counter()
+        mods[name].main(csv=print)
+        print(f"{name}/wall_s,{(time.perf_counter()-t0)*1e6:.0f},done",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

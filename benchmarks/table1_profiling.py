@@ -1,0 +1,77 @@
+"""Table 1 — profiling ResNet fwd/back per worker count.
+
+Measures real fwd/back wall time of our JAX ResNet on this host (reduced
+depth so CPU stays tractable), scales the global batch with w exactly as
+the paper does (m = per-worker batch fixed), and adds the analytic
+all-reduce term from eqs. (2)-(4) for the distributed part.  Prints our
+columns next to the paper's measured K40m numbers.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.collectives import cost as C
+from repro.configs.resnet110 import ResNetConfig
+from repro.data.synthetic import CifarLike
+from repro.models.resnet import ResNetModel
+from repro.models.spec import n_params
+
+PAPER = {1: (108.0, 236.5, 402.5, 318.0), 2: (110.2, 274.6, 427.2, 576.2),
+         4: (107.1, 290.1, 444.3, 1152.4), 8: (106.0, 307.4, 470.2, 2177.8)}
+
+
+def run(m_per_worker: int = 16, depth: int = 20, reps: int = 3):
+    cfg = ResNetConfig(name=f"resnet{depth}-bench", depth=depth, width=16)
+    model = ResNetModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_bytes = n_params(model.param_specs()) * 4
+    data = CifarLike(size=4096, seed=0)
+
+    fwd = jax.jit(lambda p, b: model.loss(p, b))
+    bwd = jax.jit(jax.grad(model.loss))
+
+    rows = []
+    for w in (1, 2, 4, 8):
+        batch = {k: jnp.asarray(v)
+                 for k, v in data.batch(0, m_per_worker * w).items()}
+        # measure per-worker compute: per-worker batch slice
+        local = {k: v[:m_per_worker] for k, v in batch.items()}
+        fwd(params, local).block_until_ready()
+        jax.block_until_ready(bwd(params, local))
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            fwd(params, local).block_until_ready()
+        t_fwd = (time.perf_counter() - t0) / reps
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(bwd(params, local))
+        t_fwdback = (time.perf_counter() - t0) / reps
+        t_back = max(t_fwdback - t_fwd, 1e-9)
+        t_comm = C.step_time(1, 0.0, 0.0, w, n_bytes, C.TPU_V5E)
+        t_total = t_fwdback + t_comm
+        imgs = m_per_worker * w / t_total
+        rows.append({
+            "w": w, "t_fwd_ms": t_fwd * 1e3, "t_back_ms": t_back * 1e3,
+            "t_total_ms": t_total * 1e3, "imgs_per_s": imgs,
+            "paper_total_ms": PAPER[w][2], "paper_imgs_per_s": PAPER[w][3],
+        })
+    # scaling efficiency 4->8 (paper: 94.5%)
+    eff = rows[3]["imgs_per_s"] / (2 * rows[2]["imgs_per_s"])
+    return rows, eff
+
+
+def main(csv=print):
+    rows, eff = run()
+    for r in rows:
+        csv(f"table1/w={r['w']},{r['t_total_ms']*1e3:.0f},"
+            f"imgs_per_s={r['imgs_per_s']:.1f};paper={r['paper_imgs_per_s']}")
+    csv(f"table1/scaling_efficiency_4to8,0,ours={eff:.3f};paper=0.945")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Capstone: the paper's scheduler driving THIS framework's workloads.
+
+Builds per-architecture speed models f(w) from the dry-run roofline records
+(compute+memory terms scale ~1/w with more chips; the collective term is
+~flat in the relevant range, playing the role of the paper's (w-1)n/w
+term), then allocates a 512-chip fleet across training jobs for the
+assigned architectures with the doubling heuristic vs Optimus +1-greedy.
+
+  PYTHONPATH=src python examples/llm_scheduler.py
+"""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import scheduler as S
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "dryrun")
+BASE_CHIPS = 256  # the mesh the roofline terms were measured on
+
+
+def load_train_records():
+    out = {}
+    for fn in glob.glob(os.path.join(DRYRUN, "*train_4k__16x16__baseline*")):
+        r = json.load(open(fn))
+        roof = r["roofline"]
+        out[r["arch"]] = {
+            "serial_s": (roof["compute_s"] + roof["memory_s"]) * BASE_CHIPS,
+            "coll_s": roof["collective_s"],
+        }
+    return out
+
+
+def speed_fn(rec):
+    """epochs/sec up to a constant: 1 / step_time(w)."""
+    def f(w):
+        if w <= 0:
+            return 0.0
+        return 1.0 / (rec["serial_s"] / w + rec["coll_s"])
+    return f
+
+
+def main():
+    recs = load_train_records()
+    if not recs:
+        print("run the dry-run sweep first"); return
+    jobs = []
+    for i, (arch, rec) in enumerate(sorted(recs.items())):
+        # remaining epochs Q: pretend each job needs 100 "epochs" of its
+        # own step time — Q only weights the marginal-gain comparison.
+        jobs.append((i, 100.0, speed_fn(rec)))
+    archs = [a for a, _ in sorted(recs.items())]
+
+    C = 512
+    doubling = S.doubling_heuristic(jobs, C)
+    greedy = S.optimus_greedy(jobs, C)
+    t_d = S.total_time(jobs, doubling)
+    t_g = S.total_time(jobs, greedy)
+
+    print(f"{'arch':22s} {'doubling':>9s} {'greedy':>7s}   (chips)")
+    for i, a in enumerate(archs):
+        print(f"{a:22s} {doubling[i]:9d} {greedy[i]:7d}")
+    print(f"\nsum: doubling {sum(doubling.values())}, "
+          f"greedy {sum(greedy.values())} (capacity {C})")
+    exact_p2 = S.exact_dp(jobs, C, max_w=256, powers_of_two=True)
+    t_e = S.total_time(jobs, exact_p2)
+    print(f"total completion (s-units): doubling {t_d:.0f}, "
+          f"greedy {t_g:.0f}, exact-pow2 {t_e:.0f}")
+    print(f"doubling is within {100*(t_d/t_e-1):.1f}% of the exact "
+          f"power-of-two optimum.")
+    bad = [w for w in greedy.values() if w & (w - 1)]
+    print(f"NOTE: greedy's {len(bad)} non-power-of-two allocations "
+          f"{sorted(bad)} are not realizable TPU slices — on a torus, the "
+          f"paper's power-of-two restriction is structural, so the "
+          f"doubling heuristic gives up nothing and stays near-optimal.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Quickstart: train a small LM end-to-end with the public API.
+
+Default is a ~10M-param model for 200 steps (CPU-tractable); pass
+``--size 100m --steps 300`` on real hardware for the ~100M run the
+production config targets.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.synthetic import TokenStream
+from repro.engine.steps import make_train_step, init_train_state
+from repro.models import spec as pspec
+from repro.models.registry import build_model
+from repro.optim.optimizers import adamw
+from repro.optim.schedule import warmup_cosine
+
+SIZES = {
+    # (layers, d_model, heads, kv, d_ff, vocab)
+    "10m": (4, 256, 4, 2, 1024, 8192),
+    "100m": (12, 768, 12, 4, 3072, 32768),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", choices=list(SIZES), default="10m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    L, D, H, KV, F, V = SIZES[args.size]
+    cfg = dataclasses.replace(
+        get_config("qwen2.5-3b"), name=f"quickstart-{args.size}",
+        n_layers=L, d_model=D, n_heads=H, n_kv_heads=KV, d_head=D // H,
+        d_ff=F, vocab_size=V)
+    model = build_model(cfg)
+    print(f"{cfg.name}: {pspec.n_params(model.param_specs())/1e6:.1f}M params")
+
+    opt = adamw()
+    state = init_train_state(model, opt)
+    step = jax.jit(make_train_step(model, opt))
+    data = TokenStream(V, args.seq, seed=0)
+    sched = warmup_cosine(3e-4, warmup=20, total=args.steps)
+
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v)
+                 for k, v in data.batch(i, args.batch).items()}
+        state, loss = step(state, batch, jnp.float32(sched(i)))
+        if i % 20 == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss {float(loss):.4f}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

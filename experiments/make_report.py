@@ -1,0 +1,92 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from
+experiments/dryrun/*.json.
+
+  PYTHONPATH=src python experiments/make_report.py > experiments/roofline.md
+"""
+import glob
+import json
+import os
+import sys
+
+DIR = os.path.join(os.path.dirname(__file__), "dryrun")
+
+ARCH_ORDER = ["qwen2.5-3b", "qwen2-vl-2b", "h2o-danube-1.8b", "mamba2-780m",
+              "jamba-v0.1-52b", "qwen3-moe-30b-a3b", "gemma-2b", "dbrx-132b",
+              "whisper-base", "qwen2.5-14b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load():
+    recs = {}
+    for fn in glob.glob(os.path.join(DIR, "*.json")):
+        r = json.load(open(fn))
+        recs[(r["arch"], r["shape"], r["mesh"], r["profile"])] = r
+    return recs
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.1f}" if s >= 1e-4 else f"{s*1e3:.3f}"
+
+
+def roofline_table(recs, mesh="16x16", profile="baseline"):
+    print(f"\n### Roofline — mesh {mesh} ({profile})\n")
+    print("| arch | shape | mem/dev GiB | compute ms | memory ms | "
+          "collective ms | dominant | MODEL_FLOPS/HLO | per-step bound |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh, profile))
+            if not r:
+                print(f"| {arch} | {shape} | — | — | — | — | — | — | — |")
+                continue
+            roof = r["roofline"]
+            u = r["useful_flops_ratio"]
+            bound = max(roof["compute_s"], roof["memory_s"],
+                        roof["collective_s"])
+            print(f"| {arch} | {shape} | "
+                  f"{r['memory']['peak_bytes_per_device']/2**30:.2f} | "
+                  f"{fmt_ms(roof['compute_s'])} | {fmt_ms(roof['memory_s'])} | "
+                  f"{fmt_ms(roof['collective_s'])} | {roof['dominant']} | "
+                  f"{u:.3f} | {fmt_ms(bound)} |" if u is not None else
+                  f"| {arch} | {shape} | ... |")
+
+
+def dryrun_table(recs):
+    print("\n### Dry-run compile proof (all combos)\n")
+    print("| arch | shape | 16x16 | 2x16x16 | window | params |")
+    print("|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r1 = recs.get((arch, shape, "16x16", "baseline"))
+            r2 = recs.get((arch, shape, "2x16x16", "baseline"))
+            w = r1 and r1.get("window")
+            p = r1 and f"{r1['params_total']/1e9:.2f}B"
+            ok1 = "OK" if r1 else "—"
+            ok2 = "OK" if r2 else "—"
+            print(f"| {arch} | {shape} | {ok1} | {ok2} | {w} | {p} |")
+
+
+def collective_mix(recs, mesh="16x16"):
+    print(f"\n### Collective mix (GB per device per step, {mesh})\n")
+    print("| arch | shape | all-reduce | all-gather | reduce-scatter | "
+          "all-to-all | permute |")
+    print("|---|---|---|---|---|---|---|")
+    kinds = ["all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh, "baseline"))
+            if not r:
+                continue
+            c = r["roofline"]["collectives"]
+            cells = " | ".join(f"{c.get(k, 0)/2**30:.2f}" for k in kinds)
+            print(f"| {arch} | {shape} | {cells} |")
+
+
+if __name__ == "__main__":
+    recs = load()
+    sys.stderr.write(f"{len(recs)} records\n")
+    dryrun_table(recs)
+    roofline_table(recs, "16x16")
+    roofline_table(recs, "2x16x16")
+    collective_mix(recs)

@@ -1,0 +1,86 @@
+"""Checkpoint store: npz pytree snapshots with a JSON manifest.
+
+Elasticity is the point (paper §6): params and optimizer state are
+data-parallel-replicated, so a checkpoint written at w workers restores
+bit-identically at any w' — the restart only changes the mesh and the LR
+(eq. 7).  Save/restore round-trip times are measured by
+benchmarks/table2_stop_restart.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(template, flat: dict[str, np.ndarray]):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key!r}")
+        arr = flat[key]
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointStore:
+    def __init__(self, directory: str):
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:010d}.npz")
+
+    def save(self, step: int, state: dict, meta: dict | None = None
+             ) -> float:
+        """Write a checkpoint; returns wall seconds spent."""
+        t0 = time.perf_counter()
+        flat = _flatten(state)
+        tmp = self._path(step) + ".tmp.npz"  # np.savez appends .npz itself
+        np.savez(tmp[:-4], **flat)
+        os.replace(tmp, self._path(step))
+        manifest = {"step": step, "meta": meta or {},
+                    "time": time.time()}
+        with open(os.path.join(self.dir, f"ckpt_{step:010d}.json"), "w") as f:
+            json.dump(manifest, f)
+        return time.perf_counter() - t0
+
+    def steps(self) -> list[int]:
+        out = []
+        for fn in os.listdir(self.dir):
+            if fn.startswith("ckpt_") and fn.endswith(".npz"):
+                out.append(int(fn[5:-4]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, template, step: int | None = None
+                ) -> tuple[dict, dict, float]:
+        """-> (state, meta, seconds)."""
+        t0 = time.perf_counter()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        with np.load(self._path(step)) as z:
+            flat = {k: z[k] for k in z.files}
+        state = _unflatten(template, flat)
+        with open(os.path.join(self.dir, f"ckpt_{step:010d}.json")) as f:
+            manifest = json.load(f)
+        return state, manifest["meta"], time.perf_counter() - t0

@@ -1,0 +1,83 @@
+"""Analytic per-minibatch time models — paper §3.2 eqs. (2)–(4) verbatim.
+
+α: latency per message [s]; β: transfer time per byte [s/B];
+γ: compute cost per vector byte [s/B]; n: model gradient size [bytes];
+m: per-worker minibatch; w: workers.
+
+``HardwareCoefficients`` maps the constants onto the TPU v5e target (ICI hop
+latency / link bandwidth / VPU reduce throughput) — the functional form is
+unchanged (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareCoefficients:
+    alpha: float = 1e-6       # ICI hop latency ~1us
+    beta: float = 1.0 / 45e9  # per-byte on a ~45GB/s effective ICI link
+    gamma: float = 1.0 / 400e9  # VPU reduce bytes/s
+    name: str = "tpu_v5e"
+
+
+TPU_V5E = HardwareCoefficients()
+# The paper's cluster: 100 Gbit/s (4x EDR) InfiniBand, K40m-era hosts.
+INFINIBAND_100G = HardwareCoefficients(
+    alpha=2e-6, beta=1.0 / 12.5e9, gamma=1.0 / 50e9, name="ib_100g")
+
+
+def t_ring(m, T_fwd, T_back, w, n, hw: HardwareCoefficients = TPU_V5E):
+    """Eq. (2): ring algorithm."""
+    return (m * (T_fwd + T_back)
+            + (w - 1) * 4 * hw.alpha
+            + (w - 1) * (n / w) * 4 * hw.beta
+            + (w - 1) * (n / w) * 2 * hw.gamma)
+
+
+def t_dh(m, T_fwd, T_back, w, n, hw: HardwareCoefficients = TPU_V5E):
+    """Eq. (3): doubling-halving (power-of-two w)."""
+    lw = math.log2(w) if w > 1 else 0.0
+    return (m * (T_fwd + T_back)
+            + 4 * lw * hw.alpha
+            + 4 * n * hw.beta
+            + 2.5 * n * hw.gamma)
+
+
+def t_bb(m, T_fwd, T_back, w, n, hw: HardwareCoefficients = TPU_V5E):
+    """Eq. (4): binary blocks (any w)."""
+    lw = math.ceil(math.log2(w)) if w > 1 else 0
+    return (m * (T_fwd + T_back)
+            + (5 + 4 * lw) * hw.alpha
+            + 7 * n * hw.beta
+            + 3 * n * hw.gamma)
+
+
+def step_time(m, T_fwd, T_back, w, n, hw: HardwareCoefficients = TPU_V5E,
+              algorithm: str | None = None) -> float:
+    """Per-minibatch time with the algorithm Horovod would pick (§2.1)."""
+    if algorithm is None:
+        from repro.collectives.schedules import best_algorithm
+        algorithm = best_algorithm(w, n)
+    fn = {"ring": t_ring, "doubling_halving": t_dh, "binary_blocks": t_bb}
+    return fn[algorithm](m, T_fwd, T_back, w, n, hw)
+
+
+def simulated_step_time(m, T_fwd, T_back, w, n,
+                        hw: HardwareCoefficients = TPU_V5E,
+                        algorithm: str | None = None) -> float:
+    """First-principles variant: α/β/γ counters from executing the actual
+    schedule (repro.collectives.schedules) instead of the closed forms.
+    Used to cross-validate eqs. (2)-(4)."""
+    import numpy as np
+    from repro.collectives.schedules import ALGORITHMS, best_algorithm
+    algorithm = algorithm or best_algorithm(w, n)
+    # execute on a tiny vector; counters scale linearly in n
+    probe = 64
+    v = np.zeros((w, probe))
+    _, st = ALGORITHMS[algorithm](v, itemsize=1)
+    scale = n / probe
+    comm = (st.steps * hw.alpha + st.bytes_sent * scale * hw.beta
+            + st.bytes_reduced * scale * hw.gamma)
+    return m * (T_fwd + T_back) + comm

@@ -1,0 +1,14 @@
+"""gemma-2b [dense] — GeGLU, head_dim=256, MQA (kv=1). [arXiv:2403.08295]"""
+from repro.configs.base import ModelConfig, reduced
+
+CONFIG = ModelConfig(
+    name="gemma-2b", family="dense",
+    source="arXiv:2403.08295 (Gemma 2B)",
+    n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1, d_head=256,
+    d_ff=16384, vocab_size=256000,
+    activation="geglu", tie_embeddings=True,
+)
+
+
+def smoke_config():
+    return reduced(CONFIG, d_head=32)

@@ -1,0 +1,112 @@
+"""Elastic checkpoint–stop–restart trainer (paper §5–6).
+
+Drives any model exposing ``loss(params, batch)`` through training segments
+at varying worker counts w.  Per-worker minibatch m stays fixed (global
+batch = m*w, §5), the LR rescales linearly on resize (eq. 7), and LR decay
+boundaries stay pinned to *epochs* so they shift in step-space with the
+batch size, exactly as the paper describes.  Stop and restart costs are
+measured, not assumed — benchmarks/table2_stop_restart.py reports them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.store import CheckpointStore
+from repro.optim.optimizers import Optimizer
+from repro.optim.schedule import rescale_lr
+
+
+@dataclasses.dataclass
+class SegmentRecord:
+    w: int
+    steps: int
+    epochs: float
+    losses: list           # (global_step, cumulative_epoch, loss)
+    seconds: float
+    restore_seconds: float
+    save_seconds: float
+
+
+class ElasticTrainer:
+    def __init__(self, model, optimizer: Optimizer, data,
+                 ckpt: CheckpointStore, *, base_lr_1w: float,
+                 m_per_worker: int = 128,
+                 decay_epochs: tuple = (100, 150), decay_factor: float = 0.1,
+                 dataset_size: int | None = None):
+        self.model = model
+        self.opt = optimizer
+        self.data = data
+        self.ckpt = ckpt
+        self.base_lr_1w = base_lr_1w
+        self.m = m_per_worker
+        self.decay_epochs = decay_epochs
+        self.decay_factor = decay_factor
+        self.dataset = dataset_size or getattr(data, "size", 50_000)
+
+        def train_step(params, opt_state, batch, lr):
+            loss, grads = jax.value_and_grad(self.model.loss)(params, batch)
+            new_params, new_opt = self.opt.update(grads, opt_state, params,
+                                                  lr)
+            return loss, new_params, new_opt
+
+        self._step = jax.jit(train_step)
+
+    # ------------------------------------------------------------ state ----
+    def fresh_state(self, key=None) -> dict:
+        params = self.model.init(key if key is not None
+                                 else jax.random.PRNGKey(0))
+        return {"params": params, "opt": self.opt.init(params),
+                "step": jnp.zeros((), jnp.int32),
+                "epoch": jnp.zeros((), jnp.float32)}
+
+    def _lr(self, w: int, epoch: float) -> float:
+        # linear scaling (eq. 7 relative to the 1-worker base) + epoch-pinned
+        # step decay
+        lr = rescale_lr(self.base_lr_1w, w, 1)
+        for b in self.decay_epochs:
+            if epoch >= b:
+                lr *= self.decay_factor
+        return lr
+
+    # ---------------------------------------------------------- segments ---
+    def train_segment(self, w: int, n_steps: int, *, resume: bool = True,
+                      log_every: int = 10) -> SegmentRecord:
+        restore_s = 0.0
+        if resume and self.ckpt.latest_step() is not None:
+            template = self.fresh_state()
+            state, meta, restore_s = self.ckpt.restore(template)
+        else:
+            state = self.fresh_state()
+
+        global_batch = self.m * w
+        epochs_per_step = global_batch / self.dataset
+        losses = []
+        t0 = time.perf_counter()
+        step0 = int(state["step"])
+        epoch = float(state["epoch"])
+        params, opt_state = state["params"], state["opt"]
+        for i in range(n_steps):
+            gstep = step0 + i
+            batch = self.data.batch(gstep, global_batch)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            lr = self._lr(w, epoch)
+            loss, params, opt_state = self._step(params, opt_state, batch,
+                                                 lr)
+            epoch += epochs_per_step
+            if i % log_every == 0 or i == n_steps - 1:
+                losses.append((gstep, epoch, float(loss)))
+        seconds = time.perf_counter() - t0
+
+        state = {"params": params, "opt": opt_state,
+                 "step": jnp.asarray(step0 + n_steps, jnp.int32),
+                 "epoch": jnp.asarray(epoch, jnp.float32)}
+        save_s = self.ckpt.save(step0 + n_steps, state,
+                                meta={"w": w, "epoch": epoch})
+        return SegmentRecord(w=w, steps=n_steps, epochs=epoch,
+                             losses=losses, seconds=seconds,
+                             restore_seconds=restore_s, save_seconds=save_s)

@@ -1,0 +1,102 @@
+"""Job model for the scheduler: each job is a DL training run whose speed
+f(w) comes from either the analytic cost models (eqs. 2-4, algorithm-aware
+and therefore *bumpy* across the power-of-two boundary — the effect the
+doubling heuristic exploits) or a fitted ResourceModel (eq. 5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import numpy as np
+
+from repro.collectives import cost as cost_lib
+
+
+@dataclasses.dataclass
+class JobSpec:
+    """Static description of a training job."""
+    job_id: int
+    arrival: float                 # seconds
+    epochs: float                  # epochs to convergence (Q at start)
+    dataset: int = 50_000          # examples/epoch (CIFAR-10)
+    m: int = 128                   # per-worker minibatch (paper §5)
+    n_bytes: float = 6.9e6         # gradient size (ResNet-110 ~1.7M params f32)
+    T_fwd: float = 108e-3 / 128    # per-example forward (Table 1)
+    T_back: float = 236.5e-3 / 128  # per-example backward (Table 1)
+    # Calibrated against Table 1 measured T_total (402.5 -> 470.2 ms for
+    # w = 1 -> 8): fixed framework overhead plus per-worker overhead from
+    # backprop/all-reduce overlap contention.
+    T_const: float = 48e-3
+    T_per_worker: float = 9.7e-3
+    hw: cost_lib.HardwareCoefficients = cost_lib.INFINIBAND_100G
+    max_w: int = 8                 # paper's single-node cap
+    # "table2": f(w) fitted (eq. 5, NNLS) to the paper's measured Table-2
+    # job totals — the faithful basis for the §7 simulation.  "analytic":
+    # eqs. (2)-(4) from first principles (bumpy across power-of-two w —
+    # used to demonstrate the doubling-vs-greedy trap at LLM-scale n).
+    speed_mode: str = "table2"
+
+    def step_time(self, w: int) -> float:
+        """Per-minibatch wall time at w workers (algorithm-aware)."""
+        return (cost_lib.step_time(self.m, self.T_fwd, self.T_back, w,
+                                   self.n_bytes, self.hw)
+                + self.T_const + self.T_per_worker * w)
+
+    def speed(self, w: int) -> float:
+        """f(w): epochs per second at w workers (0 workers -> 0)."""
+        if w <= 0:
+            return 0.0
+        if self.speed_mode == "table2":
+            base = float(_table2_model().f(np.array([w]))[0])
+            # non-power-of-two w pays the binary-blocks penalty (eq. 4 vs 3)
+            if w & (w - 1):
+                t_dh = cost_lib.t_dh(self.m, self.T_fwd, self.T_back,
+                                     w, self.n_bytes, self.hw)
+                t_bb = cost_lib.t_bb(self.m, self.T_fwd, self.T_back,
+                                     w, self.n_bytes, self.hw)
+                base *= t_dh / t_bb
+            return base
+        steps_per_epoch = self.dataset / (self.m * w)
+        return 1.0 / (steps_per_epoch * self.step_time(w))
+
+    def time_for(self, epochs: float, w: int) -> float:
+        s = self.speed(w)
+        return math.inf if s <= 0 else epochs / s
+
+
+# Paper Table 2 baselines: (w, epochs, minutes) for ResNet-110/CIFAR-10.
+TABLE2_RUNS = [(1, 160, 368.0), (2, 170, 232.0), (4, 160, 126.0),
+               (8, 170, 84.0)]
+_TABLE2_CACHE = None
+
+
+def _table2_model():
+    """ResourceModel (eq. 5) NNLS-fitted to the paper's Table 2 runs."""
+    global _TABLE2_CACHE
+    if _TABLE2_CACHE is None:
+        from repro.core.resource_model import fit_resource_model
+        ws = np.array([r[0] for r in TABLE2_RUNS], float)
+        speeds = np.array([r[1] / (r[2] * 60.0) for r in TABLE2_RUNS])
+        _TABLE2_CACHE = fit_resource_model(ws, speeds, m=128, n=6.9e6)
+    return _TABLE2_CACHE
+
+
+def make_speed_table(job: JobSpec, max_w: int) -> np.ndarray:
+    """speed[w] for w = 0..max_w (index 0 is 0.0)."""
+    return np.array([job.speed(w) for w in range(max_w + 1)])
+
+
+def synthetic_workload(n_jobs: int, mean_interarrival: float, seed: int,
+                       epoch_lo: float = 120, epoch_hi: float = 200
+                       ) -> list[JobSpec]:
+    """Poisson arrivals (exponential gaps), epochs ~ U[lo, hi] — §7 setup."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    jobs = []
+    for j in range(n_jobs):
+        t += float(rng.exponential(mean_interarrival))
+        jobs.append(JobSpec(job_id=j, arrival=t,
+                            epochs=float(rng.uniform(epoch_lo, epoch_hi))))
+    return jobs

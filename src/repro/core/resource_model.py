@@ -1,0 +1,61 @@
+"""Resource-to-speed model — paper §3.2, eq. (5).
+
+    f(w) = (theta0 * m/w + theta1 * (w-1) + theta2 * (w-1) * n/w
+            + theta3)^{-1}        [epochs/second]
+
+theta >= 0 fitted by NNLS from observed (w, speed) points.  The same f
+covers all three all-reduce algorithms (the thetas absorb the different
+coefficients of eqs. 2-4).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.convergence import nnls
+
+
+def _features(w: np.ndarray, m: float, n: float) -> np.ndarray:
+    w = np.asarray(w, float)
+    return np.stack([m / w, (w - 1.0), (w - 1.0) * n / w,
+                     np.ones_like(w)], axis=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourceModel:
+    theta: np.ndarray          # [4], non-negative
+    m: float                   # per-worker minibatch (paper keeps it fixed)
+    n: float                   # model/gradient size
+
+    def seconds_per_epoch(self, w) -> np.ndarray:
+        w = np.asarray(w, float)
+        return _features(w, self.m, self.n) @ self.theta
+
+    def f(self, w) -> np.ndarray:
+        """Training speed in epochs/second (eq. 5)."""
+        t = self.seconds_per_epoch(w)
+        return 1.0 / np.maximum(t, 1e-12)
+
+
+def fit_resource_model(ws: np.ndarray, speeds: np.ndarray, m: float,
+                       n: float) -> ResourceModel:
+    """speeds: measured epochs/second at worker counts ws."""
+    ws = np.asarray(ws, float)
+    speeds = np.asarray(speeds, float)
+    y = 1.0 / np.maximum(speeds, 1e-12)        # seconds per epoch
+    theta = nnls(_features(ws, m, n), y)
+    return ResourceModel(theta=theta, m=m, n=n)
+
+
+def profile_to_speeds(step_times: dict[int, float], steps_per_epoch_1w: float
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """Convert per-step wall times at each w into epochs/sec observations.
+
+    With per-GPU minibatch fixed (paper §5), w workers take
+    steps_per_epoch_1w / w steps per epoch.
+    """
+    ws = np.array(sorted(step_times), float)
+    secs_per_epoch = np.array(
+        [step_times[int(w)] * steps_per_epoch_1w / w for w in ws])
+    return ws, 1.0 / secs_per_epoch

@@ -1,0 +1,144 @@
+"""Resource allocation — paper §4.
+
+The problem (§4.1):   min Σ_j t_j,  t_j = Q_j / f_j(w_j),
+                      Σ_j w_j <= C,  w_j in Z+           (NP-hard, non-convex)
+
+Solvers:
+  * ``doubling_heuristic``  — §4.2, the paper's contribution: start every job
+    at 1 worker, repeatedly *double* the job with the best average marginal
+    gain (Q/f(w) - Q/f(2w)) / w.  Doubling steps over the power-of-two
+    cliff (8 -> 9 is a per-GPU regression under doubling-halving; 8 -> 16 is
+    not), where +1 greedy stalls.
+  * ``optimus_greedy``      — the Optimus baseline: +1 worker at a time.
+  * ``exact_dp``            — exact DP over worker counts (validation).
+  * ``fixed``               — every job requests a constant w (§7 baselines).
+
+All solvers take jobs as (job_id, Q, speed_fn) and return {job_id: w}.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Sequence
+
+Alloc = dict[int, int]
+JobTuple = tuple[int, float, Callable[[int], float]]  # (id, Q, speed_fn)
+
+
+def _gain_double(Q: float, f, w: int) -> float:
+    """Average marginal gain of doubling w -> 2w, per added GPU (eq. 6)."""
+    t_now = Q / max(f(w), 1e-12)
+    t_next = Q / max(f(2 * w), 1e-12)
+    return (t_now - t_next) / w
+
+
+def doubling_heuristic(jobs: Sequence[JobTuple], capacity: int,
+                       max_w: int | None = None) -> Alloc:
+    jobs = list(jobs)
+    alloc: Alloc = {}
+    used = 0
+    # 1 worker to every job (FIFO when oversubscribed)
+    for (jid, _, _) in jobs:
+        if used < capacity:
+            alloc[jid] = 1
+            used += 1
+        else:
+            alloc[jid] = 0
+    # doubling by best average marginal gain
+    while True:
+        best, best_gain = None, 0.0
+        for (jid, Q, f) in jobs:
+            w = alloc[jid]
+            if w == 0:
+                continue
+            if max_w is not None and 2 * w > max_w:
+                continue
+            if used + w > capacity:   # doubling adds w more workers
+                continue
+            g = _gain_double(Q, f, w)
+            if g > best_gain:
+                best, best_gain = jid, g
+        if best is None:
+            return alloc
+        used += alloc[best]
+        alloc[best] *= 2
+
+
+def optimus_greedy(jobs: Sequence[JobTuple], capacity: int,
+                   max_w: int | None = None) -> Alloc:
+    """Optimus [8]: add the single best projected worker at each step."""
+    jobs = list(jobs)
+    alloc: Alloc = {}
+    used = 0
+    for (jid, _, _) in jobs:
+        if used < capacity:
+            alloc[jid] = 1
+            used += 1
+        else:
+            alloc[jid] = 0
+    while used < capacity:
+        best, best_gain = None, 0.0
+        for (jid, Q, f) in jobs:
+            w = alloc[jid]
+            if w == 0:
+                continue
+            if max_w is not None and w + 1 > max_w:
+                continue
+            g = Q / max(f(w), 1e-12) - Q / max(f(w + 1), 1e-12)
+            if g > best_gain:
+                best, best_gain = jid, g
+        if best is None:
+            return alloc
+        alloc[best] += 1
+        used += 1
+    return alloc
+
+
+def fixed(jobs: Sequence[JobTuple], capacity: int, w_fixed: int) -> Alloc:
+    """Every job requests w_fixed GPUs, granted FIFO while capacity lasts."""
+    alloc: Alloc = {}
+    used = 0
+    for (jid, _, _) in jobs:
+        w = min(w_fixed, capacity - used)
+        w = w if w == w_fixed else 0    # all-or-nothing gang allocation
+        alloc[jid] = w
+        used += w
+    return alloc
+
+
+def exact_dp(jobs: Sequence[JobTuple], capacity: int,
+             max_w: int | None = None, powers_of_two: bool = False) -> Alloc:
+    """Exact minimizer of Σ Q_j / f_j(w_j) by DP over capacity.
+
+    Exponential-free: O(J * C * W). Small instances only (validation).
+    """
+    jobs = list(jobs)
+    J = len(jobs)
+    wmax = min(max_w or capacity, capacity)
+    choices = ([2 ** k for k in range(int(math.log2(wmax)) + 1)]
+               if powers_of_two else list(range(1, wmax + 1)))
+    assert J <= capacity, "exact_dp assumes every job can get >=1 worker (Z+)"
+    # dp[c] = (cost, alloc-tuple) best using first j jobs and c workers
+    dp = {0: (0.0, ())}
+    for (jid, Q, f) in jobs:
+        ndp: dict[int, tuple[float, tuple]] = {}
+        for c, (cost, chosen) in dp.items():
+            for w in choices:
+                nc = c + w
+                if nc > capacity:
+                    continue
+                t = 0.0 if w == 0 else Q / max(f(w), 1e-12)
+                cand = (cost + t, chosen + (w,))
+                if nc not in ndp or cand[0] < ndp[nc][0]:
+                    ndp[nc] = cand
+        dp = ndp
+    best_cost, best_alloc = min(dp.values(), key=lambda kv: kv[0])
+    return {jid: w for (jid, _, _), w in zip(jobs, best_alloc)}
+
+
+def total_time(jobs: Sequence[JobTuple], alloc: Alloc) -> float:
+    tot = 0.0
+    for (jid, Q, f) in jobs:
+        w = alloc.get(jid, 0)
+        if w > 0:
+            tot += Q / max(f(w), 1e-12)
+    return tot

@@ -1,0 +1,186 @@
+"""Cluster scheduler simulation — paper §7.
+
+Event-driven simulation of a C-GPU cluster with Poisson job arrivals.
+Strategies (Table 3): ``precompute``, ``exploratory``, and fixed 1/2/4/8.
+Reallocation happens at arrivals, completions and periodic intervals; every
+allocation change costs the measured checkpoint-stop-restart pause (~10 s,
+§6).  The exploratory strategy gives a new job 8 GPUs for its first ten
+minutes, running 2.5 min at each of 1, 2, 4, 8 GPUs to collect the (w, f(w))
+points the resource model (eq. 5) needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import numpy as np
+
+from repro.core import scheduler as sched
+from repro.core.jobs import JobSpec
+
+RESTART_COST = 10.0          # seconds (paper §6)
+EXPLORE_SEGMENT = 150.0      # 2.5 minutes at each of 1, 2, 4, 8 (§7)
+EXPLORE_WS = (1, 2, 4, 8)
+RESCHEDULE_EVERY = 150.0
+
+
+@dataclasses.dataclass
+class _Active:
+    spec: JobSpec
+    remaining: float              # epochs
+    w: int = 0
+    frozen_until: float = 0.0     # restart pause
+    explore_started: float | None = None
+
+    def explore_w(self, now: float) -> int | None:
+        """Worker count dictated by the explore phase, or None if done."""
+        if self.explore_started is None:
+            return None
+        seg = int((now - self.explore_started) // EXPLORE_SEGMENT)
+        if seg >= len(EXPLORE_WS):
+            return None
+        return EXPLORE_WS[seg]
+
+    def speed(self, now: float) -> float:
+        if now < self.frozen_until or self.w <= 0:
+            return 0.0
+        return self.spec.speed(self.w)
+
+
+@dataclasses.dataclass
+class SimResult:
+    strategy: str
+    completion_times: dict[int, float]
+    arrival_times: dict[int, float]
+    peak_concurrency: int
+
+    @property
+    def avg_jct_hours(self) -> float:
+        jcts = [self.completion_times[j] - self.arrival_times[j]
+                for j in self.completion_times]
+        return float(np.mean(jcts)) / 3600.0
+
+
+def _allocate(strategy: str, active: list[_Active], capacity: int,
+              now: float) -> dict[int, int]:
+    """Target allocation for the current set of active jobs."""
+    if strategy.startswith("fixed"):
+        k = int(strategy.split("_")[1])
+        tuples = [(a.spec.job_id, a.remaining, a.spec.speed) for a in active]
+        return sched.fixed(tuples, capacity, k)
+
+    alloc: dict[int, int] = {}
+    cap = capacity
+    dynamic: list[_Active] = []
+    if strategy == "exploratory":
+        # explore-phase jobs hold 8 GPUs (gang) while profiling
+        for a in active:
+            ew = a.explore_w(now)
+            if ew is not None:
+                grant = 8 if cap >= 8 else 0
+                alloc[a.spec.job_id] = min(ew, grant) if grant else 0
+                cap -= grant
+            else:
+                dynamic.append(a)
+    else:  # precompute: all jobs schedulable immediately
+        dynamic = list(active)
+    tuples = [(a.spec.job_id, a.remaining, a.spec.speed) for a in dynamic]
+    alloc.update(sched.doubling_heuristic(tuples, max(cap, 0),
+                                          max_w=active[0].spec.max_w
+                                          if active else 8))
+    return alloc
+
+
+def simulate(jobs: list[JobSpec], capacity: int = 64,
+             strategy: str = "precompute") -> SimResult:
+    pending = sorted(jobs, key=lambda j: j.arrival)
+    active: list[_Active] = []
+    done: dict[int, float] = {}
+    arrivals = {j.job_id: j.arrival for j in jobs}
+    now = 0.0
+    peak = 0
+    next_resched = 0.0
+
+    def apply_alloc(now: float):
+        target = _allocate(strategy, active, capacity, now)
+        for a in active:
+            w_new = target.get(a.spec.job_id, 0)
+            if w_new != a.w:
+                a.w = w_new
+                if w_new > 0:
+                    a.frozen_until = now + RESTART_COST
+        # also freeze explore-phase jobs at segment switches implicitly via
+        # reschedule events (RESCHEDULE_EVERY == EXPLORE_SEGMENT).
+
+    while pending or active:
+        # --- next event time -------------------------------------------
+        t_candidates = []
+        if pending:
+            t_candidates.append(pending[0].arrival)
+        t_candidates.append(next_resched)
+        for a in active:
+            s = a.speed(now)
+            if s > 0:
+                t_candidates.append(max(now, a.frozen_until)
+                                    + a.remaining / s)
+            elif a.w > 0 and a.frozen_until > now:
+                t_candidates.append(a.frozen_until)
+        if not t_candidates:
+            t_candidates = [pending[0].arrival]
+        t_next = max(now, min(t_candidates))
+
+        # --- advance progress -------------------------------------------
+        for a in active:
+            run_from = max(now, a.frozen_until)
+            dt = max(0.0, t_next - run_from)
+            a.remaining -= dt * (a.spec.speed(a.w) if a.w > 0 else 0.0)
+
+        now = t_next
+
+        # --- completions -------------------------------------------------
+        finished = [a for a in active if a.remaining <= 1e-9]
+        for a in finished:
+            done[a.spec.job_id] = now
+            active.remove(a)
+
+        # --- arrivals ----------------------------------------------------
+        arrived = False
+        while pending and pending[0].arrival <= now + 1e-9:
+            j = pending.pop(0)
+            a = _Active(spec=j, remaining=j.epochs)
+            if strategy == "exploratory":
+                a.explore_started = now
+            active.append(a)
+            arrived = True
+
+        peak = max(peak, len(active))
+
+        # --- reallocation ------------------------------------------------
+        if arrived or finished or now + 1e-9 >= next_resched:
+            if active:
+                apply_alloc(now)
+            next_resched = now + RESCHEDULE_EVERY
+
+    return SimResult(strategy=strategy, completion_times=done,
+                     arrival_times=arrivals, peak_concurrency=peak)
+
+
+def run_table3(seed: int = 0, capacity: int = 64,
+               contention: dict[str, tuple[float, int]] | None = None
+               ) -> dict[str, dict[str, float]]:
+    """Reproduce Table 3: avg JCT (hours) per strategy x contention level."""
+    from repro.core.jobs import synthetic_workload
+    contention = contention or {"extreme": (250.0, 206),
+                                "moderate": (500.0, 114),
+                                "none": (1000.0, 44)}
+    strategies = ["precompute", "exploratory", "fixed_8", "fixed_4",
+                  "fixed_2", "fixed_1"]
+    out: dict[str, dict[str, float]] = {}
+    for level, (gap, n_jobs) in contention.items():
+        jobs = synthetic_workload(n_jobs, gap, seed)
+        out[level] = {}
+        for s in strategies:
+            res = simulate(jobs, capacity, s)
+            out[level][s] = res.avg_jct_hours
+    return out

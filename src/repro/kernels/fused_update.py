@@ -1,0 +1,73 @@
+"""Fused flat-buffer momentum-SGD update — Pallas TPU kernel.
+
+The Horovod "fusion buffer" analogue on TPU: after gradient exchange, the
+packed 1-D gradient buffer is consumed in one VMEM pass that applies weight
+decay, updates momentum, and writes new params — 3 reads + 2 writes per
+element instead of the ~3x traffic of unfused elementwise HLOs.  Also used
+on elastic restarts where the LR just changed (eq. 7): lr rides in SMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(lr_ref, p_ref, g_ref, mu_ref, p_out, mu_out, *,
+            momentum: float, weight_decay: float, nesterov: bool):
+    lr = lr_ref[0]
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32) + weight_decay * p
+    mu = mu_ref[...].astype(jnp.float32)
+    mu_new = momentum * mu + g
+    step = (g + momentum * mu_new) if nesterov else mu_new
+    p_out[...] = (p - lr * step).astype(p_out.dtype)
+    mu_out[...] = mu_new.astype(mu_out.dtype)
+
+
+def fused_sgd_update(params_flat, grads_flat, mu_flat, lr, *,
+                     momentum: float = 0.9, weight_decay: float = 1e-4,
+                     nesterov: bool = False, block: int = 65536,
+                     interpret: bool = False):
+    """params/grads/mu: 1-D f32 buffers of equal length; lr: scalar.
+
+    Returns (new_params, new_mu).
+    """
+    n = params_flat.shape[0]
+    block = min(block, n)
+    n_blocks = -(-n // block)
+    pad = n_blocks * block - n
+
+    def pad1(x):
+        return jnp.pad(x, ((0, pad),)) if pad else x
+
+    p, g, mu = pad1(params_flat), pad1(grads_flat), pad1(mu_flat)
+    lr_arr = jnp.asarray([lr], jnp.float32)
+
+    kern = functools.partial(_kernel, momentum=momentum,
+                             weight_decay=weight_decay, nesterov=nesterov)
+    new_p, new_mu = pl.pallas_call(
+        kern,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # lr scalar
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(p.shape, params_flat.dtype),
+            jax.ShapeDtypeStruct(mu.shape, mu_flat.dtype),
+        ],
+        interpret=interpret,
+    )(lr_arr, p, g, mu)
+    if pad:
+        new_p, new_mu = new_p[:n], new_mu[:n]
+    return new_p, new_mu

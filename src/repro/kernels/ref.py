@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def swa_attention_ref(q, k, v, *, causal: bool = True,
+                      window: int | None = None):
+    """q, k, v: [BH, S, D] -> [BH, S, D]; f32 math throughout."""
+    bh, s, d = q.shape
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bqd,bkd->bqk", qf, kf) / math.sqrt(d)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, vf).astype(q.dtype)
+
+
+def fused_sgd_update_ref(params_flat, grads_flat, mu_flat, lr, *,
+                         momentum: float = 0.9, weight_decay: float = 1e-4,
+                         nesterov: bool = False):
+    p = params_flat.astype(jnp.float32)
+    g = grads_flat.astype(jnp.float32) + weight_decay * p
+    mu_new = momentum * mu_flat.astype(jnp.float32) + g
+    step = (g + momentum * mu_new) if nesterov else mu_new
+    return ((p - lr * step).astype(params_flat.dtype),
+            mu_new.astype(mu_flat.dtype))
+
+
+def rmsnorm_ref(x, w, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)

@@ -1,0 +1,120 @@
+"""Sliding-window flash attention Pallas TPU kernel.
+
+TPU adaptation notes (DESIGN.md §3): the GPU flash-attention tiling maps to
+a (batch*heads, q_blocks, k_blocks) grid with the k dimension innermost so
+the online-softmax running state (m, l, acc) lives in VMEM scratch across k
+steps.  Blocks are 128-aligned for the MXU.  Sliding-window + causal
+masking is positional: k blocks entirely outside [q_pos - window, q_pos]
+are skipped with ``pl.when`` (no MXU work; see EXPERIMENTS.md §Perf for the
+DMA-skip refinement).
+
+Layout: q, k, v are [BH, S, D] (batch*heads flattened, KV already
+GQA-repeated).  f32 accumulation, bf16/f32 inputs.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, block_q: int, block_k: int, seq_len: int,
+            causal: bool, window: int | None, n_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_lo = qi * block_q
+    k_lo = ki * block_k
+    # block-level skip: causal => k_lo <= q_hi; window => k_hi > q_lo - W
+    live = jnp.bool_(True)
+    if causal:
+        live &= k_lo <= q_lo + block_q - 1
+    if window is not None:
+        live &= (k_lo + block_k - 1) > (q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)              # [BQ, D]
+        k = k_ref[0].astype(jnp.float32)              # [BK, D]
+        v = v_ref[0].astype(jnp.float32)              # [BK, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < seq_len
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                           # [BQ]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_cur
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def swa_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                  block_q: int = 128, block_k: int = 128,
+                  interpret: bool = False):
+    """q, k, v: [BH, S, D] -> [BH, S, D]."""
+    bh, s, d = q.shape
+    assert k.shape == v.shape == (bh, s, d)
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    n_q = -(-s // block_q)
+    n_k = -(-s // block_k)
+    pad = n_q * block_q - s
+    if pad:
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+    else:
+        qp, kp, vp = q, k, v
+
+    grid = (bh, n_q, n_k)
+    kern = functools.partial(
+        _kernel, scale=1.0 / math.sqrt(d), block_q=block_q, block_k=block_k,
+        seq_len=s, causal=causal, window=window, n_k=n_k)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # m: running max
+            pltpu.VMEM((block_q,), jnp.float32),      # l: running denom
+            pltpu.VMEM((block_q, d), jnp.float32),    # acc: running output
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :s] if pad else out

@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  Single pod: 16x16 = 256 chips (TPU v5e pod, data x model).
+Multi-pod: 2 x 16 x 16 = 512 chips with a leading "pod" axis (data
+parallelism across pods over DCN/ICI).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(shape))
+
+
+def make_tiny_mesh(*, multi_pod: bool = False):
+    """Scaled-down mesh (8 host devices) for CI subprocess tests."""
+    shape = (2, 2, 2) if multi_pod else (2, 4)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(shape))
+
+
+def make_data_mesh(n: int):
+    """Pure data-parallel mesh of n devices (elastic trainer segments)."""
+    return jax.make_mesh((n,), ("data",), axis_types=(AxisType.Auto,))

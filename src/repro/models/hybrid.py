@@ -1,0 +1,186 @@
+"""Jamba-style hybrid: Mamba + attention 1:{attn_every-1} interleave with MoE
+every ``moe_every``-th layer (arXiv:2403.19887).
+
+A *block* of ``attn_every`` layers is the scan unit: the attention layer sits
+at position ``attn_every // 2`` (Jamba places the first attention at layer 4),
+MoE FFNs at odd positions.  Blocks are structurally identical, so their
+params stack and the model scans over blocks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import mamba2 as m2
+from repro.models.spec import TensorSpec as TS, init_params
+from repro.models.transformer import attn_specs, mlp_specs, attention
+
+
+class JambaModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        assert cfg.n_layers % cfg.attn_every == 0
+        self.block_size = cfg.attn_every
+        self.n_blocks = cfg.n_layers // cfg.attn_every
+        self.attn_pos = cfg.attn_every // 2
+
+    def _is_moe_pos(self, pos: int) -> bool:
+        return self.cfg.is_moe and (pos % self.cfg.moe_every == 1)
+
+    # ------------------------------------------------------------ specs ----
+    def _pos_specs(self, pos: int) -> dict:
+        cfg, nb = self.cfg, self.n_blocks
+        D = cfg.d_model
+        s: dict = {}
+        if pos == self.attn_pos:
+            s["ln1"] = {"scale": TS((nb, D), ("layers", "embed"),
+                                    init="zeros")}
+            s["attn"] = attn_specs(cfg, nb)
+        else:
+            s["mamba"] = m2.mamba_specs(cfg, nb)
+        s["ln2"] = {"scale": TS((nb, D), ("layers", "embed"), init="zeros")}
+        if self._is_moe_pos(pos):
+            s["moe"] = moe_lib.moe_specs(cfg, nb)
+        else:
+            s["mlp"] = mlp_specs(cfg, nb)
+        return s
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        V, D = cfg.vocab_size, cfg.d_model
+        return {"embed": TS((V, D), ("vocab", "embed"), init="embed"),
+                "unembed": TS((V, D), ("vocab", "embed"), init="embed"),
+                "final_norm": {"scale": TS((D,), ("embed",), init="zeros")},
+                "blocks": {f"pos{p}": self._pos_specs(p)
+                           for p in range(self.block_size)}}
+
+    def expert_param_specs(self):
+        return moe_lib.expert_only_specs(self.param_specs())
+
+    def init(self, key):
+        return init_params(key, self.param_specs())
+
+    # ---------------------------------------------------------- forward ----
+    def _block(self, bp, x, positions, sh, window, caches=None, pos=None):
+        """One block of ``attn_every`` layers. caches: dict per position."""
+        cfg = self.cfg
+        aux_sum = 0.0
+        new_caches = {}
+        for p_i in range(self.block_size):
+            p = bp[f"pos{p_i}"]
+            if p_i == self.attn_pos:
+                h = L.rmsnorm(x, p["ln1"]["scale"])
+                cache_i = None
+                if caches is not None:
+                    cache_i = (caches[f"pos{p_i}"]["k"],
+                               caches[f"pos{p_i}"]["v"])
+                out, nc = attention(cfg, p["attn"], h, positions, sh,
+                                    window=window, cache=cache_i, pos=pos)
+                if nc is not None:
+                    new_caches[f"pos{p_i}"] = {"k": nc[0], "v": nc[1]}
+                x = x + out
+            else:
+                h = L.rmsnorm(x, p["mamba"]["norm"]["scale"])
+                if caches is None:
+                    x = x + m2.mamba_mixer(cfg, p["mamba"], h, sh)
+                else:
+                    out, st = m2.mamba_decode(cfg, p["mamba"], h,
+                                              caches[f"pos{p_i}"], sh)
+                    new_caches[f"pos{p_i}"] = st
+                    x = x + out
+            h = L.rmsnorm(x, p["ln2"]["scale"])
+            if self._is_moe_pos(p_i):
+                out, aux = moe_lib.moe_ffn(cfg, p["moe"], h, sh)
+                aux_sum = aux_sum + aux
+            else:
+                out = L.mlp(cfg, p["mlp"], h)
+            x = x + out
+        return x, aux_sum, new_caches
+
+    def forward(self, params, batch, sh=L.NO_SHARD, *, window=None):
+        cfg = self.cfg
+        x = L.embed_tokens(params["embed"], batch["tokens"])
+        x = sh(x, "batch", "seq", "embed")
+        B, S = batch["tokens"].shape
+        positions = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+        def body(carry, bp):
+            x, aux = carry
+            x, aux_i, _ = self._block(bp, x, positions, sh, window)
+            return (x, aux + aux_i), None
+
+        (x, aux), _ = L.scan_layers(body, (x, 0.0), params["blocks"])
+        x = L.rmsnorm(x, params["final_norm"]["scale"])
+        return L.lm_logits(x, params["unembed"]), aux
+
+    def loss(self, params, batch, sh=L.NO_SHARD):
+        logits, aux = self.forward(params, batch, sh)
+        return L.softmax_cross_entropy(logits, batch["labels"]) + 0.01 * aux
+
+    def prefill(self, params, batch, sh=L.NO_SHARD, *, window=None):
+        logits, _ = self.forward(params, batch, sh, window=window)
+        return logits
+
+    # ------------------------------------------------------------ serve ----
+    def cache_specs(self, shape: InputShape, dtype=jnp.bfloat16) -> dict:
+        cfg, nb = self.cfg, self.n_blocks
+        B, S = shape.global_batch, shape.seq_len
+        H, P, N, K = (cfg.n_ssm_heads, cfg.ssm_headdim, cfg.ssm_state,
+                      cfg.ssm_conv)
+        out: dict = {}
+        for p in range(self.block_size):
+            if p == self.attn_pos:
+                kv = (nb, B, S, cfg.n_kv_heads, cfg.d_head)
+                axes = ("layers", "batch", "cache_seq", "kv_heads",
+                        "head_dim")
+                out[f"pos{p}"] = {"k": TS(kv, axes, dtype=dtype, init="zeros"),
+                                  "v": TS(kv, axes, dtype=dtype, init="zeros")}
+            else:
+                out[f"pos{p}"] = {
+                    "conv_x": TS((nb, B, K - 1, H, P),
+                                 ("layers", "batch", "conv", "ssm_heads",
+                                  "head_dim"), dtype=dtype, init="zeros"),
+                    "conv_B": TS((nb, B, K - 1, N),
+                                 ("layers", "batch", "conv", "ssm_state"),
+                                 dtype=dtype, init="zeros"),
+                    "conv_C": TS((nb, B, K - 1, N),
+                                 ("layers", "batch", "conv", "ssm_state"),
+                                 dtype=dtype, init="zeros"),
+                    "ssm": TS((nb, B, H, P, N),
+                              ("layers", "batch", "ssm_heads", "head_dim",
+                               "ssm_state"), dtype=jnp.float32, init="zeros"),
+                }
+        return out
+
+    def decode_step(self, params, cache, batch, sh=L.NO_SHARD, *,
+                    window=None):
+        cfg = self.cfg
+        x = L.embed_tokens(params["embed"], batch["tokens"])
+        pos = batch["pos"]
+        positions = pos[:, None]
+
+        def body(x, xs):
+            bp, caches = xs
+            x, _, new_caches = self._block(bp, x, positions, sh, window,
+                                           caches=caches, pos=pos)
+            return x, new_caches
+
+        x, new_cache = L.scan_layers(body, x, (params["blocks"], cache),
+                                     checkpoint_body=False)
+        x = L.rmsnorm(x, params["final_norm"]["scale"])
+        return L.lm_logits(x, params["unembed"]), new_cache
+
+    def input_specs(self, shape: InputShape) -> dict:
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            return {"tokens": TS((B, S), ("batch", "seq"), dtype=jnp.int32),
+                    "labels": TS((B, S), ("batch", "seq"), dtype=jnp.int32)}
+        if shape.kind == "prefill":
+            return {"tokens": TS((B, S), ("batch", "seq"), dtype=jnp.int32)}
+        return {"tokens": TS((B, 1), ("batch", "seq"), dtype=jnp.int32),
+                "pos": TS((B,), ("batch",), dtype=jnp.int32)}

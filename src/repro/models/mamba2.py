@@ -1,0 +1,242 @@
+"""Mamba-2 (SSD, state-space duality) in pure JAX.
+
+Training/prefill uses the chunked SSD form: within a chunk of length Q the
+quadratic (attention-like) branch runs on the MXU; across chunks a sequential
+``lax.scan`` carries the [B, H, P, N] state.  Only one chunk's [B, H, Q, Q]
+score block is live at a time.  Decode is the O(1) recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models import layers as L
+from repro.models.spec import TensorSpec as TS, init_params
+
+NEG_INF = -1e30
+
+
+def mamba_specs(cfg: ModelConfig, n: int) -> dict:
+    D, H, P, N = cfg.d_model, cfg.n_ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    K = cfg.ssm_conv
+    return {
+        "norm": {"scale": TS((n, D), ("layers", "embed"), init="zeros")},
+        "wz": TS((n, D, H, P), ("layers", "embed", "ssm_heads", "head_dim")),
+        "wx": TS((n, D, H, P), ("layers", "embed", "ssm_heads", "head_dim")),
+        "wB": TS((n, D, N), ("layers", "embed", "ssm_state")),
+        "wC": TS((n, D, N), ("layers", "embed", "ssm_state")),
+        "wdt": TS((n, D, H), ("layers", "embed", "ssm_heads")),
+        "conv_x": TS((n, K, H, P), ("layers", "conv", "ssm_heads", "head_dim"),
+                     init="normal", scale=0.5),
+        "conv_B": TS((n, K, N), ("layers", "conv", "ssm_state"),
+                     init="normal", scale=0.5),
+        "conv_C": TS((n, K, N), ("layers", "conv", "ssm_state"),
+                     init="normal", scale=0.5),
+        "A_log": TS((n, H), ("layers", "ssm_heads"), init="zeros"),
+        "D_skip": TS((n, H), ("layers", "ssm_heads"), init="ones"),
+        "dt_bias": TS((n, H), ("layers", "ssm_heads"), init="zeros"),
+        "gnorm": {"scale": TS((n, H, P), ("layers", "ssm_heads", "head_dim"),
+                              init="zeros")},
+        "wo": TS((n, H, P, D), ("layers", "ssm_heads", "head_dim", "embed")),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv along axis 1. x: [B,S,...]; w: [K,...]."""
+    K = w.shape[0]
+    out = x * w[K - 1]
+    for i in range(1, K):
+        shifted = jnp.pad(x, [(0, 0), (i, 0)] + [(0, 0)] * (x.ndim - 2)
+                          )[:, :-i or None][:, :x.shape[1]]
+        out = out + shifted * w[K - 1 - i]
+    return out
+
+
+def _project(cfg, p, x):
+    dt_ = x.dtype
+    z = jnp.einsum("bsd,dhp->bshp", x, p["wz"].astype(dt_))
+    xin = jnp.einsum("bsd,dhp->bshp", x, p["wx"].astype(dt_))
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["wB"].astype(dt_))
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["wC"].astype(dt_))
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(dt_))
+    return z, xin, Bm, Cm, dt
+
+
+def _finish(cfg, p, y, xin, z, dt, a):
+    # y/D-skip/gate/out_proj shared by the chunked and decode paths.
+    y = y + p["D_skip"].astype(y.dtype)[None, None, :, None] * xin
+    y = y * jax.nn.silu(z)
+    y = L.rmsnorm(y, p["gnorm"]["scale"])
+    return jnp.einsum("bshp,hpd->bsd", y, p["wo"].astype(y.dtype))
+
+
+def mamba_mixer(cfg: ModelConfig, p, x, sh):
+    """Chunked SSD. x: [B, S, D] -> [B, S, D]."""
+    dt_ = x.dtype
+    B_, S, D = x.shape
+    H, P, N, Q = cfg.n_ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_chunk
+    z, xin, Bm, Cm, dt = _project(cfg, p, x)
+    xin = jax.nn.silu(_causal_conv(xin, p["conv_x"].astype(dt_)))
+    Bm = jax.nn.silu(_causal_conv(Bm, p["conv_B"].astype(dt_)))
+    Cm = jax.nn.silu(_causal_conv(Cm, p["conv_C"].astype(dt_)))
+    xin = sh(xin, "batch", "seq", "ssm_heads", "head_dim")
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))        # [B,S,H]
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))                    # [H]
+    dA = dt * a                                                     # [B,S,H]
+
+    Q = min(Q, S)
+    pad = (-S) % Q
+    if pad:
+        z, xin, Bm, Cm, dt, dA = [
+            jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+            for t in (z, xin, Bm, Cm, dt, dA)]
+    nc = (S + pad) // Q
+
+    def chunk(t):
+        return t.reshape((B_, nc, Q) + t.shape[2:]).swapaxes(0, 1)
+
+    xin_c, Bm_c, Cm_c, dt_c, dA_c = map(chunk, (xin, Bm, Cm, dt, dA))
+
+    h0 = jnp.zeros((B_, H, P, N), jnp.float32)
+
+    def body2(h, xs):
+        xc, Bc, Cc, dtc, dAc = xs
+        cs = jnp.cumsum(dAc, axis=1)                          # [B,Q,H]
+        CB = jnp.einsum("bin,bjn->bij", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+        diff = cs[:, :, None, :] - cs[:, None, :, :]
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        decay = jnp.exp(jnp.where(mask[None, :, :, None], diff, NEG_INF))
+        M = CB[:, :, :, None] * decay * dtc[:, None, :, :]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", M.astype(dt_), xc)
+        # inter: [B,Q,H,P] = C[B,Q,N] . h[B,H,P,N] scaled by exp(cs)[B,Q,H]
+        y_inter = jnp.einsum("bin,bhpn->bihp", Cc.astype(jnp.float32), h)
+        y_inter = y_inter * jnp.exp(cs)[:, :, :, None]
+        # state update: h' = h*exp(cs_Q) + sum_j exp(cs_Q - cs_j) dt_j B_j x_j
+        w = jnp.exp(cs[:, -1:, :] - cs) * dtc                 # [B,Q,H]
+        dh = jnp.einsum("bjh,bjn,bjhp->bhpn",
+                        w, Bc.astype(jnp.float32), xc.astype(jnp.float32))
+        h = h * jnp.exp(cs[:, -1])[:, :, None, None] + dh
+        return h, (y_intra.astype(jnp.float32) + y_inter).astype(dt_)
+
+    _, y = L.scan_layers(body2, h0, (xin_c, Bm_c, Cm_c, dt_c, dA_c))
+    y = y.swapaxes(0, 1).reshape(B_, S + pad, H, P)[:, :S]
+    return _finish(cfg, p, y, xin[:, :S], z[:, :S], dt[:, :S], a)
+
+
+def mamba_decode(cfg: ModelConfig, p, x, state, sh):
+    """One-token recurrence. x: [B, 1, D]; state dict with conv_*/ssm."""
+    dt_ = x.dtype
+    K = cfg.ssm_conv
+    z, xin, Bm, Cm, dt = _project(cfg, p, x)
+
+    def conv_step(buf, new, w):
+        # buf [B, K-1, ...], new [B, 1, ...], w [K, ...]
+        window = jnp.concatenate([buf, new], axis=1)          # [B,K,...]
+        out = jnp.sum(window * w[None], axis=1, keepdims=True)
+        return window[:, 1:], out
+
+    cx, xin = conv_step(state["conv_x"], xin, p["conv_x"].astype(dt_))
+    cB, Bm = conv_step(state["conv_B"], Bm, p["conv_B"].astype(dt_))
+    cC, Cm = conv_step(state["conv_C"], Cm, p["conv_C"].astype(dt_))
+    xin, Bm, Cm = jax.nn.silu(xin), jax.nn.silu(Bm), jax.nn.silu(Cm)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))[:, 0]   # [B,H]
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    h = state["ssm"]                                                # [B,H,P,N]
+    decay = jnp.exp(dt * a)[:, :, None, None]
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt, Bm[:, 0].astype(jnp.float32),
+                     xin[:, 0].astype(jnp.float32))
+    h = h * decay + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), h)
+    y = y[:, None].astype(dt_)                                      # [B,1,H,P]
+    out = _finish(cfg, p, y, xin, z, dt[:, None], a)
+    return out, {"conv_x": cx, "conv_B": cB, "conv_C": cC, "ssm": h}
+
+
+class Mamba2Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        n, D, V = cfg.n_layers, cfg.d_model, cfg.vocab_size
+        return {"embed": TS((V, D), ("vocab", "embed"), init="embed"),
+                "unembed": TS((V, D), ("vocab", "embed"), init="embed"),
+                "final_norm": {"scale": TS((D,), ("embed",), init="zeros")},
+                "layers": mamba_specs(cfg, n)}
+
+    def init(self, key):
+        return init_params(key, self.param_specs())
+
+    def forward(self, params, batch, sh=L.NO_SHARD, *, window=None):
+        cfg = self.cfg
+        x = L.embed_tokens(params["embed"], batch["tokens"])
+        x = sh(x, "batch", "seq", "embed")
+
+        def body(x, p_i):
+            h = L.rmsnorm(x, p_i["norm"]["scale"])
+            return x + mamba_mixer(cfg, p_i, h, sh), None
+
+        x, _ = L.scan_layers(body, x, params["layers"])
+        x = L.rmsnorm(x, params["final_norm"]["scale"])
+        return L.lm_logits(x, params["unembed"]), 0.0
+
+    def loss(self, params, batch, sh=L.NO_SHARD):
+        logits, _ = self.forward(params, batch, sh)
+        return L.softmax_cross_entropy(logits, batch["labels"])
+
+    def prefill(self, params, batch, sh=L.NO_SHARD, *, window=None):
+        logits, _ = self.forward(params, batch, sh)
+        return logits
+
+    def cache_specs(self, shape: InputShape, dtype=jnp.bfloat16) -> dict:
+        cfg = self.cfg
+        n, B = cfg.n_layers, shape.global_batch
+        H, P, N, K = (cfg.n_ssm_heads, cfg.ssm_headdim, cfg.ssm_state,
+                      cfg.ssm_conv)
+        return {
+            "conv_x": TS((n, B, K - 1, H, P),
+                         ("layers", "batch", "conv", "ssm_heads", "head_dim"),
+                         dtype=dtype, init="zeros"),
+            "conv_B": TS((n, B, K - 1, N),
+                         ("layers", "batch", "conv", "ssm_state"),
+                         dtype=dtype, init="zeros"),
+            "conv_C": TS((n, B, K - 1, N),
+                         ("layers", "batch", "conv", "ssm_state"),
+                         dtype=dtype, init="zeros"),
+            "ssm": TS((n, B, H, P, N),
+                      ("layers", "batch", "ssm_heads", "head_dim",
+                       "ssm_state"), dtype=jnp.float32, init="zeros"),
+        }
+
+    def decode_step(self, params, cache, batch, sh=L.NO_SHARD, *,
+                    window=None):
+        cfg = self.cfg
+        x = L.embed_tokens(params["embed"], batch["tokens"])
+
+        def body(x, xs):
+            p_i, st = xs
+            h = L.rmsnorm(x, p_i["norm"]["scale"])
+            out, new_st = mamba_decode(cfg, p_i, h, st, sh)
+            return x + out, new_st
+
+        x, new_cache = L.scan_layers(body, x, (params["layers"], cache),
+                                     checkpoint_body=False)
+        x = L.rmsnorm(x, params["final_norm"]["scale"])
+        return L.lm_logits(x, params["unembed"]), new_cache
+
+    def input_specs(self, shape: InputShape) -> dict:
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            return {"tokens": TS((B, S), ("batch", "seq"), dtype=jnp.int32),
+                    "labels": TS((B, S), ("batch", "seq"), dtype=jnp.int32)}
+        if shape.kind == "prefill":
+            return {"tokens": TS((B, S), ("batch", "seq"), dtype=jnp.int32)}
+        return {"tokens": TS((B, 1), ("batch", "seq"), dtype=jnp.int32),
+                "pos": TS((B,), ("batch",), dtype=jnp.int32)}

@@ -1,0 +1,112 @@
+"""Mixture-of-Experts FFN with group-local sort-based capacity dispatch.
+
+GShard-style semantics: each batch row is a dispatch *group* with capacity
+C = ceil(S * top_k * cf / E).  Within a group, token->expert assignments are
+sorted (a local [S*K] sort — never a cross-shard global sort) and gathered
+into a static [B, E, C, D] buffer.  FLOPs stay proportional to *active*
+experts, and the [B,S,.] -> [B,E,C,.] resharding (batch on ``data``, experts
+on ``model``) is exactly the expert-parallel dispatch all-to-all, inserted
+by GSPMD at the sharding constraint.  Avoids both the O(T*E*C) one-hot mask
+(OOM at 128 experts x 1M tokens) and global sorts.  Router load-balance aux
+loss follows Switch Transformer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.spec import TensorSpec as TS
+
+
+def moe_specs(cfg: ModelConfig, n: int) -> dict:
+    Lx, D, F, E = n, cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": TS((Lx, D, E), ("layers", "embed", None)),
+        "wi_gate": TS((Lx, E, D, F), ("layers", "experts", "embed", "mlp")),
+        "wi_up": TS((Lx, E, D, F), ("layers", "experts", "embed", "mlp")),
+        "wo": TS((Lx, E, F, D), ("layers", "experts", "mlp", "embed")),
+    }
+
+
+def expert_only_specs(param_specs: dict):
+    """Subtree of per-expert weights (for active-param accounting)."""
+    out = {}
+
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                walk(v, path + (k,))
+        else:
+            if "experts" in (tree.axes or ()):
+                out["/".join(path)] = tree
+
+    walk(param_specs, ())
+    return out
+
+
+def group_capacity(group_tokens: int, cfg: ModelConfig) -> int:
+    c = int(group_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # >=8, rounded up to 8
+
+
+def moe_ffn(cfg: ModelConfig, p, x, sh):
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar)."""
+    dt = x.dtype
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    SK = S * K
+    C = group_capacity(S, cfg)
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(dt)
+                        ).astype(jnp.float32)                        # [B,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eid = jax.lax.top_k(probs, K)                              # [B,S,K]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance loss.
+    frac = jnp.mean(jax.nn.one_hot(eid[..., 0], E, dtype=jnp.float32),
+                    axis=(0, 1))
+    aux = E * jnp.sum(frac * jnp.mean(probs, axis=(0, 1)))
+
+    # ---- group-local sorted dispatch ------------------------------------
+    flat_e = eid.reshape(B, SK)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)                # [B,SK]
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    # per-group expert boundaries via batched searchsorted
+    bounds = jax.vmap(lambda row: jnp.searchsorted(
+        row, jnp.arange(E + 1), side="left"))(sorted_e)              # [B,E+1]
+    counts = bounds[:, 1:] - bounds[:, :-1]                          # [B,E]
+    offsets = bounds[:, :-1]
+    slot = offsets[:, :, None] + jnp.arange(C)[None, None, :]        # [B,E,C]
+    valid = jnp.arange(C)[None, None, :] < counts[:, :, None]
+    slot = jnp.clip(slot, 0, SK - 1)
+    src = jnp.take_along_axis(order, slot.reshape(B, E * C), axis=-1)
+    src_tok = src // K                                               # [B,E*C]
+
+    gx = jnp.take_along_axis(x, src_tok[..., None], axis=1)          # [B,EC,D]
+    gx = gx.reshape(B, E, C, D) * valid[..., None].astype(dt)
+    gx = sh(gx, "batch", "experts", "capacity", "embed")  # dispatch a2a
+
+    # ---- expert FFN (gated silu) ----------------------------------------
+    g = jax.nn.silu(jnp.einsum("becd,edf->becf", gx, p["wi_gate"].astype(dt)))
+    u = jnp.einsum("becd,edf->becf", gx, p["wi_up"].astype(dt))
+    eo = jnp.einsum("becf,efd->becd", g * u, p["wo"].astype(dt))     # [B,E,C,D]
+    eo = sh(eo, "batch", "experts", "capacity", "embed")
+
+    # ---- combine (gather-based: NO scatter) ------------------------------
+    # Each token GATHERS its k expert outputs via the inverse sort
+    # permutation.  A scatter-add combine forces GSPMD to replicate the
+    # [B,S,D] f32 output across the data axis (8.6 GB all-reduces per layer
+    # at train_4k); the gather keeps every index batch-local and everything
+    # batch-sharded (EXPERIMENTS.md §Perf, pair B).
+    inv = jnp.argsort(order, axis=-1)                     # rank of asgn i
+    slot = inv - jnp.take_along_axis(offsets, flat_e, axis=-1)   # [B,SK]
+    live = slot < C                                        # dropped if over
+    slot = jnp.clip(slot, 0, C - 1)
+    idx = flat_e * C + slot                                # [B,SK] into E*C
+    eo_flat = eo.reshape(B, E * C, D)
+    gathered = jnp.take_along_axis(eo_flat, idx[..., None], axis=1)  # [B,SK,D]
+    w = (gate.reshape(B, SK) * live.astype(jnp.float32)).astype(dt)
+    out = (gathered * w[..., None]).reshape(B, S, K, D).sum(axis=2)
+    return out.astype(dt), aux

@@ -1,0 +1,109 @@
+"""ResNet (6n+2, non-bottleneck) for CIFAR-10 — the paper's own workload.
+
+Pure-functional JAX; GroupNorm replaces BatchNorm so the model is stateless
+(noted in DESIGN.md — convergence dynamics, which is what the paper's
+scheduler models, are preserved).  Per-stage residual blocks after the first
+are stacked and scanned.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.spec import TensorSpec as TS, init_params
+
+
+def conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def groupnorm(x, scale, bias, groups=8, eps=1e-5):
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    xf = x.astype(jnp.float32).reshape(b, h, w, g, c // g)
+    mu = xf.mean(axis=(1, 2, 4), keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=(1, 2, 4), keepdims=True)
+    xf = ((xf - mu) * jax.lax.rsqrt(var + eps)).reshape(b, h, w, c)
+    return (xf * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def _block_specs(n, cin, cout):
+    return {
+        "conv1": TS((n, 3, 3, cin, cout), ("layers", None, None, None, None)),
+        "n1s": TS((n, cout), ("layers", None), init="ones"),
+        "n1b": TS((n, cout), ("layers", None), init="zeros"),
+        "conv2": TS((n, 3, 3, cout, cout), ("layers", None, None, None, None)),
+        "n2s": TS((n, cout), ("layers", None), init="ones"),
+        "n2b": TS((n, cout), ("layers", None), init="zeros"),
+    }
+
+
+class ResNetModel:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.widths = [cfg.width, cfg.width * 2, cfg.width * 4]
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        n = cfg.n
+        p: dict = {"stem": TS((3, 3, 3, self.widths[0]),
+                              (None, None, None, None)),
+                   "stem_s": TS((self.widths[0],), (None,), init="ones"),
+                   "stem_b": TS((self.widths[0],), (None,), init="zeros")}
+        cin = self.widths[0]
+        for si, cout in enumerate(self.widths):
+            p[f"stage{si}_first"] = _block_specs(1, cin, cout)
+            if n > 1:
+                p[f"stage{si}_rest"] = _block_specs(n - 1, cout, cout)
+            cin = cout
+        p["fc"] = TS((self.widths[-1], cfg.num_classes), (None, None))
+        p["fc_b"] = TS((cfg.num_classes,), (None,), init="zeros")
+        return p
+
+    def init(self, key):
+        return init_params(key, self.param_specs())
+
+    def _apply_block(self, p, x, stride=1):
+        h = conv(x, p["conv1"], stride)
+        h = jax.nn.relu(groupnorm(h, p["n1s"], p["n1b"]))
+        h = conv(h, p["conv2"], 1)
+        h = groupnorm(h, p["n2s"], p["n2b"])
+        if stride != 1 or x.shape[-1] != h.shape[-1]:
+            x = x[:, ::stride, ::stride, :]  # identity shortcut (option A)
+            pad = h.shape[-1] - x.shape[-1]
+            x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        return jax.nn.relu(x + h)
+
+    def apply(self, params, images):
+        x = images.astype(jnp.bfloat16)
+        x = jax.nn.relu(groupnorm(conv(x, params["stem"]),
+                                  params["stem_s"], params["stem_b"]))
+        n = self.cfg.n
+        for si in range(3):
+            stride = 1 if si == 0 else 2
+            first = jax.tree_util.tree_map(lambda a: a[0],
+                                           params[f"stage{si}_first"])
+            x = self._apply_block(first, x, stride)
+            if n > 1:
+                def body(x, p_i):
+                    return self._apply_block(p_i, x, 1), None
+                x, _ = jax.lax.scan(jax.checkpoint(body), x,
+                                    params[f"stage{si}_rest"])
+        x = x.mean(axis=(1, 2)).astype(jnp.float32)
+        return x @ params["fc"].astype(jnp.float32) + params["fc_b"]
+
+    def loss(self, params, batch, sh=None):
+        logits = self.apply(params, batch["images"])
+        labels = batch["labels"]
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - gold)
+
+    def accuracy(self, params, batch):
+        logits = self.apply(params, batch["images"])
+        return jnp.mean((jnp.argmax(logits, -1) == batch["labels"])
+                        .astype(jnp.float32))

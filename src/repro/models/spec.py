@@ -1,0 +1,100 @@
+"""Parameter specification pytrees.
+
+Models declare their parameters as trees of :class:`TensorSpec` — shape,
+dtype, logical axis names and an initializer tag.  From one spec tree we
+derive, without duplication:
+
+* real initialized parameters (smoke tests, examples, training),
+* ``jax.ShapeDtypeStruct`` stand-ins (dry-run lowering, no allocation),
+* ``NamedSharding`` trees (resolved through :mod:`repro.sharding.rules`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    """Declarative description of one parameter tensor."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axis name per dim (or None)
+    dtype: Any = jnp.float32
+    init: str = "fan_in"  # fan_in | normal | zeros | ones | embed
+    scale: float = 1.0
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(
+                f"shape {self.shape} and axes {self.axes} rank mismatch")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, TensorSpec)
+
+
+def _tree_map(fn: Callable[[TensorSpec], Any], tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_spec)
+
+
+def abstract(tree):
+    """ShapeDtypeStruct tree — used by dry-run lowering (no allocation)."""
+    return _tree_map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree)
+
+
+def n_params(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+def param_bytes(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+               for s in leaves)
+
+
+def _init_one(key, s: TensorSpec):
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, s.dtype)
+    if s.init == "ones":
+        return jnp.ones(s.shape, s.dtype)
+    if s.init == "embed":
+        std = s.scale / math.sqrt(s.shape[-1])
+        return (jax.random.normal(key, s.shape) * std).astype(s.dtype)
+    if s.init == "normal":
+        return (jax.random.normal(key, s.shape) * s.scale).astype(s.dtype)
+    if s.init == "fan_in":
+        # fan-in = product of all dims except the last output dim; for
+        # stacked-layer params ignore the leading "layers" dim.
+        dims = list(s.shape)
+        fan_dims = dims[:-1]
+        if s.axes and s.axes[0] == "layers":
+            fan_dims = dims[1:-1]
+        fan_in = max(1, int(np.prod(fan_dims)) if fan_dims else dims[-1])
+        std = s.scale / math.sqrt(fan_in)
+        return (jax.random.normal(key, s.shape) * std).astype(s.dtype)
+    raise ValueError(f"unknown init {s.init!r}")
+
+
+def init_params(key, tree):
+    """Materialize real parameters from a spec tree (deterministic)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, max(1, len(leaves)))
+    vals = [_init_one(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def logical_axes(tree):
+    """Tree of logical-axis tuples (same structure as the spec tree)."""
+    return _tree_map(lambda s: s.axes, tree)
+
+
+def cast(tree, dtype):
+    """Spec tree with dtype replaced (e.g. bf16 serving params)."""
+    return _tree_map(lambda s: dataclasses.replace(s, dtype=dtype), tree)

@@ -1,0 +1,173 @@
+"""Whisper-style encoder-decoder transformer backbone.
+
+The mel-spectrogram + conv feature extractor is a STUB per the assignment:
+``input_specs`` provides precomputed frame embeddings [B, n_frames, D].
+Positional information is sinusoidal (computed on device — no giant constant
+tables), pre-norm LayerNorm, GELU MLPs, biased projections.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models import layers as L
+from repro.models.spec import TensorSpec as TS, init_params
+from repro.models.transformer import attn_specs, mlp_specs, attention
+
+
+def sinusoidal(positions, d_model: int):
+    """positions [B,S] -> [B,S,D] (classic transformer sinusoid)."""
+    half = d_model // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / max(1, half - 1))
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class WhisperModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def _layer_specs(self, n: int, cross: bool) -> dict:
+        cfg = self.cfg
+        D = cfg.d_model
+        s = {"ln1": {"scale": TS((n, D), ("layers", "embed"), init="ones"),
+                     "bias": TS((n, D), ("layers", "embed"), init="zeros")},
+             "attn": attn_specs(cfg, n),
+             "ln2": {"scale": TS((n, D), ("layers", "embed"), init="ones"),
+                     "bias": TS((n, D), ("layers", "embed"), init="zeros")},
+             "mlp": mlp_specs(cfg, n)}
+        if cross:
+            s["lnx"] = {"scale": TS((n, D), ("layers", "embed"), init="ones"),
+                        "bias": TS((n, D), ("layers", "embed"), init="zeros")}
+            s["xattn"] = attn_specs(cfg, n)
+        return s
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        V, D = cfg.vocab_size, cfg.d_model
+        return {
+            "embed": TS((V, D), ("vocab", "embed"), init="embed"),
+            "unembed": TS((V, D), ("vocab", "embed"), init="embed"),
+            "enc_norm": {"scale": TS((D,), ("embed",), init="ones"),
+                         "bias": TS((D,), ("embed",), init="zeros")},
+            "dec_norm": {"scale": TS((D,), ("embed",), init="ones"),
+                         "bias": TS((D,), ("embed",), init="zeros")},
+            "encoder": self._layer_specs(cfg.encoder_layers, cross=False),
+            "decoder": self._layer_specs(cfg.n_layers, cross=True),
+        }
+
+    def init(self, key):
+        return init_params(key, self.param_specs())
+
+    # ----------------------------------------------------------- encoder ---
+    def encode(self, params, frames, sh=L.NO_SHARD):
+        cfg = self.cfg
+        B, S, _ = frames.shape
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x = frames.astype(jnp.bfloat16) + sinusoidal(pos, cfg.d_model
+                                                     ).astype(jnp.bfloat16)
+        x = sh(x, "batch", "frames", "embed")
+        positions = pos
+
+        def body(x, p_i):
+            h = L.layernorm(x, p_i["ln1"]["scale"], p_i["ln1"]["bias"])
+            out, _ = attention(cfg, p_i["attn"], h, positions, sh,
+                               window=None, causal=False)
+            x = x + out
+            h = L.layernorm(x, p_i["ln2"]["scale"], p_i["ln2"]["bias"])
+            return x + L.mlp(cfg, p_i["mlp"], h), None
+
+        x, _ = L.scan_layers(body, x, params["encoder"])
+        return L.layernorm(x, params["enc_norm"]["scale"],
+                           params["enc_norm"]["bias"])
+
+    # ----------------------------------------------------------- decoder ---
+    def _dec_layer(self, p_i, x, positions, enc, sh, cache_i=None, pos=None):
+        cfg = self.cfg
+        h = L.layernorm(x, p_i["ln1"]["scale"], p_i["ln1"]["bias"])
+        out, new_cache = attention(cfg, p_i["attn"], h, positions, sh,
+                                   window=None, cache=cache_i, pos=pos)
+        x = x + out
+        h = L.layernorm(x, p_i["lnx"]["scale"], p_i["lnx"]["bias"])
+        out, _ = attention(cfg, p_i["xattn"], h, positions, sh,
+                           window=None, memory=enc, causal=False)
+        x = x + out
+        h = L.layernorm(x, p_i["ln2"]["scale"], p_i["ln2"]["bias"])
+        return x + L.mlp(cfg, p_i["mlp"], h), new_cache
+
+    def forward(self, params, batch, sh=L.NO_SHARD, *, window=None):
+        cfg = self.cfg
+        enc = self.encode(params, batch["frames"], sh)
+        B, S = batch["tokens"].shape
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x = L.embed_tokens(params["embed"], batch["tokens"])
+        x = x + sinusoidal(pos, cfg.d_model).astype(x.dtype)
+        x = sh(x, "batch", "seq", "embed")
+
+        def body(x, p_i):
+            x, _ = self._dec_layer(p_i, x, pos, enc, sh)
+            return x, None
+
+        x, _ = L.scan_layers(body, x, params["decoder"])
+        x = L.layernorm(x, params["dec_norm"]["scale"],
+                        params["dec_norm"]["bias"])
+        return L.lm_logits(x, params["unembed"]), 0.0
+
+    def loss(self, params, batch, sh=L.NO_SHARD):
+        logits, _ = self.forward(params, batch, sh)
+        return L.softmax_cross_entropy(logits, batch["labels"])
+
+    def prefill(self, params, batch, sh=L.NO_SHARD, *, window=None):
+        logits, _ = self.forward(params, batch, sh)
+        return logits
+
+    # ------------------------------------------------------------- serve ---
+    def cache_specs(self, shape: InputShape, dtype=jnp.bfloat16) -> dict:
+        cfg = self.cfg
+        n, B, S = cfg.n_layers, shape.global_batch, shape.seq_len
+        kv = (n, B, S, cfg.n_kv_heads, cfg.d_head)
+        axes = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+        return {"k": TS(kv, axes, dtype=dtype, init="zeros"),
+                "v": TS(kv, axes, dtype=dtype, init="zeros"),
+                "enc": TS((B, cfg.n_frontend_tokens, cfg.d_model),
+                          ("batch", "frames", "embed"), dtype=dtype,
+                          init="zeros")}
+
+    def decode_step(self, params, cache, batch, sh=L.NO_SHARD, *,
+                    window=None):
+        cfg = self.cfg
+        pos = batch["pos"]
+        x = L.embed_tokens(params["embed"], batch["tokens"])
+        x = x + sinusoidal(pos[:, None], cfg.d_model).astype(x.dtype)
+        enc = cache["enc"].astype(x.dtype)
+
+        def body(x, xs):
+            p_i, k_i, v_i = xs
+            x, new_cache = self._dec_layer(p_i, x, pos[:, None], enc, sh,
+                                           cache_i=(k_i, v_i), pos=pos)
+            return x, new_cache
+
+        x, (k_new, v_new) = L.scan_layers(
+            body, x, (params["decoder"], cache["k"], cache["v"]),
+            checkpoint_body=False)
+        x = L.layernorm(x, params["dec_norm"]["scale"],
+                        params["dec_norm"]["bias"])
+        logits = L.lm_logits(x, params["unembed"])
+        return logits, {"k": k_new, "v": v_new, "enc": cache["enc"]}
+
+    def input_specs(self, shape: InputShape) -> dict:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        frames = TS((B, cfg.n_frontend_tokens, cfg.d_model),
+                    ("batch", "frames", "embed"), dtype=jnp.bfloat16)
+        if shape.kind == "train":
+            return {"frames": frames,
+                    "tokens": TS((B, S), ("batch", "seq"), dtype=jnp.int32),
+                    "labels": TS((B, S), ("batch", "seq"), dtype=jnp.int32)}
+        if shape.kind == "prefill":
+            return {"frames": frames,
+                    "tokens": TS((B, S), ("batch", "seq"), dtype=jnp.int32)}
+        return {"tokens": TS((B, 1), ("batch", "seq"), dtype=jnp.int32),
+                "pos": TS((B,), ("batch",), dtype=jnp.int32)}

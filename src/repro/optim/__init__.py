@@ -1,0 +1,2 @@
+from repro.optim.optimizers import sgd, adamw, Optimizer
+from repro.optim.schedule import step_decay, warmup_cosine, rescale_lr

@@ -1,0 +1,126 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Models annotate every tensor dim with a logical axis name; a rule table maps
+logical names to mesh axes.  ``resolve`` checks divisibility against the
+actual mesh and falls back to replication when a dim does not divide (e.g.
+40 query heads or vocab 51865 on a 16-way ``model`` axis), so one rule table
+serves every architecture and mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import spec as pspec
+
+# Default logical → mesh-axis rules for the production meshes.
+#   batch:   data parallel (both pod and data axes when multi-pod)
+#   heads / kv_heads / mlp / vocab / experts: tensor/expert parallel
+#   cache_seq: context-parallel long decode (KV cache sharded along seq)
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "ssm_heads": ("model",),
+    "cache_seq": ("data",),
+    # never sharded:
+    "layers": (), "embed": (), "seq": (), "ssm_state": (), "head_dim": (),
+    "conv": (), "chunks": (), "capacity": (), "patch": (), "frames": (),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    table: Mapping[str, tuple[str, ...]]
+
+    def mesh_axes_for(self, logical: str | None, mesh: Mesh) -> tuple[str, ...]:
+        if logical is None:
+            return ()
+        axes = self.table.get(logical)
+        if axes is None:
+            return ()
+        return tuple(a for a in axes if a in mesh.shape)
+
+    def resolve_dim(self, logical: str | None, size: int, mesh: Mesh,
+                    used: set[str]) -> tuple[str, ...] | None:
+        axes = tuple(a for a in self.mesh_axes_for(logical, mesh)
+                     if a not in used)
+        if not axes:
+            return None
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        if size % total != 0:
+            # try a prefix of the axes (e.g. drop "pod" but keep "data")
+            while axes:
+                axes = axes[:-1]
+                total = 1
+                for a in axes:
+                    total *= mesh.shape[a]
+                if axes and size % total == 0:
+                    break
+            if not axes:
+                return None
+        used.update(axes)
+        return axes if len(axes) > 1 else (axes[0],)
+
+    def spec_for(self, axes: Sequence[str | None], shape: Sequence[int],
+                 mesh: Mesh) -> P:
+        used: set[str] = set()
+        parts: list = []
+        for name, size in zip(axes, shape):
+            r = self.resolve_dim(name, size, mesh, used)
+            if r is None:
+                parts.append(None)
+            elif len(r) == 1:
+                parts.append(r[0])
+            else:
+                parts.append(r)
+        # Secondary fallback: when a heads-like dim could not shard (e.g.
+        # 40 q-heads or 8 kv-heads on a 16-way "model" axis), shard head_dim
+        # instead so attention weights/activations never replicate fully.
+        if "model" in mesh.shape and "model" not in used:
+            # only when a *query/ssm* heads dim failed to shard — kv-only
+            # tensors stay replicated (Megatron GQA convention) so q and kv
+            # projections keep consistent layouts per architecture.
+            wanted_model = any(
+                n in ("heads", "ssm_heads") and parts[i] is None
+                for i, n in enumerate(axes))
+            if wanted_model:
+                for i, (name, size) in enumerate(zip(axes, shape)):
+                    if (name == "head_dim" and parts[i] is None
+                            and size % mesh.shape["model"] == 0):
+                        parts[i] = "model"
+                        used.add("model")
+                        break
+        return P(*parts)
+
+
+def default_rules(overrides: Mapping[str, tuple[str, ...]] | None = None
+                  ) -> ShardingRules:
+    table = dict(DEFAULT_RULES)
+    if overrides:
+        table.update(overrides)
+    return ShardingRules(table)
+
+
+def tree_pspecs(spec_tree, mesh: Mesh, rules: ShardingRules | None = None):
+    """PartitionSpec tree mirroring a TensorSpec tree."""
+    rules = rules or default_rules()
+    return jax.tree_util.tree_map(
+        lambda s: rules.spec_for(s.axes, s.shape, mesh),
+        spec_tree, is_leaf=pspec.is_spec)
+
+
+def tree_shardings(spec_tree, mesh: Mesh, rules: ShardingRules | None = None):
+    """NamedSharding tree mirroring a TensorSpec tree."""
+    rules = rules or default_rules()
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, rules.spec_for(s.axes, s.shape, mesh)),
+        spec_tree, is_leaf=pspec.is_spec)

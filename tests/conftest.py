@@ -1,0 +1,8 @@
+import os
+import sys
+
+# src layout import path (so plain `pytest tests/` works too)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: deliberately NO --xla_force_host_platform_device_count here — smoke
+# tests and benches must see 1 device; multi-device tests spawn subprocesses.

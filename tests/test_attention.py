@@ -1,0 +1,114 @@
+"""Attention layer tests: chunked == naive, window masks, RoPE properties
+(incl. hypothesis sweeps)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+
+def naive_attention(q, k, v, causal=True, window=None):
+    b, s, h, d = q.shape
+    scores = np.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(d)
+    qpos = np.arange(s)[:, None]
+    kpos = np.arange(s)[None, :]
+    mask = np.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = np.where(mask[None, None], scores, -1e30)
+    p = np.exp(scores - scores.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return np.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+@pytest.mark.parametrize("s,q_chunk,window", [
+    (32, 8, None), (32, 8, 8), (33, 16, 5), (16, 16, None), (40, 7, 16)])
+def test_chunked_matches_naive(s, q_chunk, window):
+    rng = np.random.default_rng(0)
+    q = rng.normal(size=(2, s, 3, 8)).astype(np.float32)
+    k = rng.normal(size=(2, s, 3, 8)).astype(np.float32)
+    v = rng.normal(size=(2, s, 3, 8)).astype(np.float32)
+    got = L.chunked_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                              causal=True, window=window, q_chunk=q_chunk)
+    want = naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attention_matches_naive_last_row():
+    rng = np.random.default_rng(1)
+    s, h, d = 24, 2, 16
+    q = rng.normal(size=(2, 1, h, d)).astype(np.float32)
+    kc = rng.normal(size=(2, s, h, d)).astype(np.float32)
+    vc = rng.normal(size=(2, s, h, d)).astype(np.float32)
+    pos = np.array([10, 23], np.int32)
+    got = L.decode_attention(jnp.asarray(q), jnp.asarray(kc),
+                             jnp.asarray(vc), jnp.asarray(pos), window=8)
+    for b in range(2):
+        t = pos[b]
+        kk = kc[b:b + 1, :t + 1]
+        vv = vc[b:b + 1, :t + 1]
+        full_q = np.concatenate([np.zeros((1, t, h, d), np.float32),
+                                 q[b:b + 1]], axis=1)
+        want = naive_attention(full_q, kk, vv, causal=True, window=8)[0, -1]
+        np.testing.assert_allclose(np.asarray(got[b, 0]), want,
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_window_1_attends_self_only():
+    """window=1 => output is exactly V at each position."""
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(1, 8, 2, 4)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 8, 2, 4)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 8, 2, 4)).astype(np.float32))
+    out = L.chunked_attention(q, k, v, causal=True, window=1, q_chunk=4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(s=st.integers(2, 40), h=st.integers(1, 4),
+       window=st.one_of(st.none(), st.integers(1, 40)),
+       q_chunk=st.integers(1, 16))
+def test_chunked_attention_property(s, h, window, q_chunk):
+    """Property: chunking never changes the result."""
+    rng = np.random.default_rng(s * 100 + h)
+    q = rng.normal(size=(1, s, h, 4)).astype(np.float32)
+    k = rng.normal(size=(1, s, h, 4)).astype(np.float32)
+    v = rng.normal(size=(1, s, h, 4)).astype(np.float32)
+    got = L.chunked_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                              causal=True, window=window, q_chunk=q_chunk)
+    want = naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=3e-4, atol=3e-4)
+
+
+def test_rope_preserves_norm_and_relativity():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(1, 6, 2, 16)).astype(np.float32))
+    pos = jnp.arange(6)[None]
+    y = L.apply_rope(x, pos, 10_000.0)
+    # rotation preserves per-head norms
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(y, axis=-1)),
+        np.asarray(jnp.linalg.norm(x, axis=-1)), rtol=1e-5)
+    # relative property: <R(p)q, R(p+k)v> depends only on k
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 16)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 1, 1, 16)).astype(np.float32))
+    def dot_at(p1, p2):
+        rq = L.apply_rope(q, jnp.array([[p1]]), 10_000.0)
+        rv = L.apply_rope(v, jnp.array([[p2]]), 10_000.0)
+        return float(jnp.sum(rq * rv))
+    assert abs(dot_at(0, 5) - dot_at(7, 12)) < 1e-4
+    assert abs(dot_at(0, 5) - dot_at(0, 6)) > 1e-6  # but not constant
+
+
+def test_mrope_sections():
+    x = jnp.ones((1, 4, 1, 12), jnp.float32)
+    pos3 = jnp.stack([jnp.arange(4), jnp.arange(4) * 2, jnp.arange(4) * 3],
+                     axis=-1)[None]
+    y = L.apply_rope(x, pos3, 10_000.0, sections=(2, 2, 2))
+    assert y.shape == x.shape
+    assert np.all(np.isfinite(np.asarray(y)))

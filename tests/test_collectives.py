@@ -1,0 +1,121 @@
+"""All-reduce schedule simulators + cost-model cross-validation (the paper's
+eqs. 2-4 against first-principles counters from executing the schedules)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.collectives import cost as C
+from repro.collectives.schedules import (ALGORITHMS, best_algorithm,
+                                         binary_blocks_allreduce,
+                                         halving_doubling_allreduce,
+                                         ring_allreduce)
+
+
+@settings(max_examples=25, deadline=None)
+@given(w=st.integers(1, 24), n=st.integers(1, 200))
+def test_ring_exact(w, n):
+    rng = np.random.default_rng(w * 1000 + n)
+    v = rng.normal(size=(w, n))
+    out, st_ = ring_allreduce(v)
+    np.testing.assert_allclose(out, np.broadcast_to(v.sum(0), (w, n)),
+                               atol=1e-9)
+    assert st_.steps == (2 * (w - 1) if w > 1 else 0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(logw=st.integers(0, 5), n=st.integers(1, 128))
+def test_halving_doubling_exact(logw, n):
+    w = 2 ** logw
+    rng = np.random.default_rng(w * 999 + n)
+    v = rng.normal(size=(w, n))
+    out, st_ = halving_doubling_allreduce(v)
+    np.testing.assert_allclose(out, np.broadcast_to(v.sum(0), (w, n)),
+                               atol=1e-9)
+    assert st_.steps == (2 * logw if w > 1 else 0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(w=st.integers(1, 24), n=st.integers(1, 128))
+def test_binary_blocks_exact(w, n):
+    rng = np.random.default_rng(w * 7 + n)
+    v = rng.normal(size=(w, n))
+    out, _ = binary_blocks_allreduce(v)
+    np.testing.assert_allclose(out, np.broadcast_to(v.sum(0), (w, n)),
+                               atol=1e-9)
+
+
+def test_ring_bandwidth_optimality():
+    """Ring moves 2n(w-1)/w bytes per rank — within 1% of the 2n lower
+    bound for large w (why Horovod uses it for big tensors)."""
+    v = np.zeros((16, 16 * 64))
+    _, st_ = ring_allreduce(v, itemsize=1)
+    assert st_.bytes_sent <= 2 * v.shape[1] * (1 - 1 / 16) + 1e-9
+
+
+def test_dh_latency_optimality():
+    """Doubling–halving needs only 2 log2(w) rounds (the paper's low-latency
+    claim for small tensors)."""
+    for w in (2, 4, 8, 16, 32):
+        _, st_ = halving_doubling_allreduce(np.zeros((w, 64)))
+        assert st_.steps == 2 * int(np.log2(w))
+
+
+@pytest.mark.parametrize("w", [2, 4, 8, 16])
+def test_cost_model_matches_schedule_counters_dh(w):
+    """Eq. (3)'s β/γ coefficients (4nβ, 2.5nγ) are upper bounds on the
+    executed schedule's counters (2n(1-1/w)·2 sent, n(1-1/w) reduced);
+    the α count 4log(w) is 2x the schedule's 2log(w) (the paper follows
+    [11] which counts both directions).  Assert the documented ratios."""
+    n = 1024
+    _, st_ = halving_doubling_allreduce(np.zeros((w, n)), itemsize=1)
+    assert st_.steps == 2 * int(np.log2(w))
+    # executed bytes: 2n(1-1/w); eq.(3) charges 4n — ratio in [2, 4]
+    ratio = 4 * n / st_.bytes_sent
+    assert 2.0 - 1e-9 <= ratio <= 4.0 + 1e-9
+    # executed reduced bytes: n(1-1/w); eq.(3) charges 2.5n — ratio in
+    # [2.5, 5]
+    ratio_g = 2.5 * n / st_.bytes_reduced
+    assert 2.5 - 1e-9 <= ratio_g <= 5.0 + 1e-9
+
+
+@pytest.mark.parametrize("w", [2, 3, 4, 6, 8, 16])
+def test_cost_model_ordering(w):
+    """At the paper's regime (n <= 1e7), doubling-halving beats ring for
+    power-of-two w in the analytic models, matching §2.1."""
+    n = 5e6
+    hw = C.INFINIBAND_100G
+    t_ring = C.t_ring(128, 1e-3, 2e-3, w, n, hw)
+    t_dh = C.t_dh(128, 1e-3, 2e-3, w, n, hw)
+    if w & (w - 1) == 0 and w > 1:
+        assert best_algorithm(w, n) == "doubling_halving"
+    else:
+        if w > 1:
+            assert best_algorithm(w, n) == "binary_blocks"
+
+
+def test_simulated_vs_analytic_step_time():
+    """First-principles (schedule-counter) step time and eq. (2)-(4) step
+    time agree within 2.5x across algorithms and w (coefficient conventions
+    differ; the scheduler only needs consistent relative ordering)."""
+    for w in (2, 4, 8, 16):
+        for alg in ("ring", "doubling_halving"):
+            a = C.step_time(128, 1e-3, 2e-3, w, 5e6, algorithm=alg)
+            s = C.simulated_step_time(128, 1e-3, 2e-3, w, 5e6, algorithm=alg)
+            assert 0.4 < a / s < 2.5, (alg, w, a, s)
+
+
+def test_pow2_cliff():
+    """The 8->9 cliff (paper §4.2): crossing a power-of-two boundary swaps
+    doubling-halving (eq. 3) for binary-blocks (eq. 4), whose 7nβ + 3nγ
+    terms make the *per-GPU speed* f(w)∝w/t(w) regress at LLM-scale n,
+    while 8->16 (still eq. 3) wins — the phenomenon the doubling heuristic
+    exploits."""
+    n = 4e9           # LLM-scale gradient (4 GB)
+    m, tf, tb = 128, 1.3e-3, 1.4e-3
+    hw = C.TPU_V5E
+    t8 = C.t_dh(m, tf, tb, 8, n, hw)
+    t9 = C.t_bb(m, tf, tb, 9, n, hw)
+    t16 = C.t_dh(m, tf, tb, 16, n, hw)
+    assert t9 > t8                       # 9 workers: slower steps
+    assert 9 / t9 < 8 / t8               # and worse aggregate speed
+    assert 16 / t16 > 1.5 * (8 / t8)     # 16 is a clear win

@@ -1,0 +1,71 @@
+"""Convergence (eq. 1) and resource (eq. 5) model fitting tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.convergence import ConvergenceModel, fit_convergence, nnls
+from repro.core.resource_model import fit_resource_model
+
+
+def test_nnls_matches_scipy():
+    from scipy.optimize import nnls as scipy_nnls
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        A = rng.normal(size=(20, 4))
+        b = rng.normal(size=20)
+        x = nnls(A, b)
+        x_ref, _ = scipy_nnls(A, b)
+        assert np.all(x >= -1e-12)
+        # objective values agree
+        assert (np.linalg.norm(A @ x - b)
+                <= np.linalg.norm(A @ x_ref - b) + 1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b0=st.floats(1e-4, 1e-2), b1=st.floats(0.1, 2.0),
+       b2=st.floats(0.0, 0.5))
+def test_fit_recovers_synthetic_curve(b0, b1, b2):
+    true = ConvergenceModel(b0, b1, b2)
+    k = np.linspace(1, 2000, 60)
+    l = true.loss_at(k)
+    fit = fit_convergence(k, l)
+    np.testing.assert_allclose(fit.loss_at(k), l, rtol=0.08, atol=0.02)
+
+
+def test_steps_to_loss():
+    m = ConvergenceModel(1e-3, 1.0, 0.1)
+    target = 0.2
+    k = m.steps_to_loss(target)
+    assert abs(m.loss_at(k) - target) < 1e-9
+    assert m.steps_to_loss(0.05) == np.inf  # below asymptote
+
+
+def test_fit_noisy_resnet_like_curve():
+    rng = np.random.default_rng(0)
+    true = ConvergenceModel(2e-3, 0.5, 0.3)
+    k = np.arange(10, 3000, 25)
+    l = true.loss_at(k) * (1 + rng.normal(scale=0.03, size=k.size))
+    fit = fit_convergence(k, l)
+    # remaining-steps prediction within 30% at a mid-curve target
+    target = true.loss_at(2000.0)
+    assert abs(fit.steps_to_loss(target) - 2000) / 2000 < 0.3
+
+
+def test_resource_model_fit_recovers_speeds():
+    theta = np.array([1.0, 0.01, 2e-7, 0.02])
+    m, n = 128, 6.9e6
+    ws = np.array([1, 2, 4, 8, 16])
+    secs = (theta[0] * m / ws + theta[1] * (ws - 1)
+            + theta[2] * (ws - 1) * n / ws + theta[3])
+    model = fit_resource_model(ws, 1.0 / secs, m, n)
+    np.testing.assert_allclose(model.f(ws), 1.0 / secs, rtol=1e-3)
+    assert np.all(model.theta >= 0)
+
+
+def test_resource_model_monotone_speed():
+    """Fitted to the paper's Table-2 points, f(w) must increase on [1, 8]
+    (more workers, more epochs/sec)."""
+    from repro.core.jobs import _table2_model
+    m = _table2_model()
+    f = m.f(np.arange(1, 9))
+    assert np.all(np.diff(f) > 0)

@@ -1,0 +1,71 @@
+"""Head padding (pad_heads_to): the shard-friendly padded-head model must be
+mathematically IDENTICAL to the unpadded model — same logits, and exactly
+zero gradient into the padded parameter slices (EXPERIMENTS.md §Perf A1)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.registry import build_model
+
+
+def _padded_from(params, pp_template, H_real):
+    out = jax.tree_util.tree_map(lambda a: a, pp_template)
+    for k in ("embed", "unembed"):
+        if k in params:
+            out[k] = params[k]
+    out["final_norm"] = params["final_norm"]
+    lp, lo = params["layers"], out["layers"]
+    for k in ("ln1", "ln2", "mlp"):
+        lo[k] = lp[k]
+    a, ao = lp["attn"], lo["attn"]
+    for key in ("wk", "wv", "bk", "bv"):
+        if key in a:
+            ao[key] = a[key]
+    ao["wq"] = jnp.zeros_like(ao["wq"]).at[:, :, :H_real].set(a["wq"])
+    ao["wo"] = jnp.zeros_like(ao["wo"]).at[:, :H_real].set(a["wo"])
+    if "bq" in a:
+        ao["bq"] = jnp.zeros_like(ao["bq"]).at[:, :H_real].set(a["bq"])
+    return out
+
+
+def test_padded_heads_identical_and_grad_isolated():
+    # 5 heads -> padded to 8 (same ratio pathology as 40 -> 48 on 16)
+    cfg = dataclasses.replace(get_smoke_config("qwen2.5-14b"),
+                              n_heads=5, n_kv_heads=1, d_head=32)
+    cfgp = dataclasses.replace(cfg, pad_heads_to=8)
+    m, mp = build_model(cfg), build_model(cfgp)
+    params = m.init(jax.random.PRNGKey(0))
+    pp = _padded_from(params, mp.init(jax.random.PRNGKey(1)), 5)
+
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 16)), jnp.int32)
+    l1, _ = m.forward(params, {"tokens": toks})
+    l2, _ = mp.forward(pp, {"tokens": toks})
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+    g = jax.grad(mp.loss)(pp, {"tokens": toks, "labels": toks})
+    assert float(jnp.abs(g["layers"]["attn"]["wq"][:, :, 5:]).max()) == 0.0
+    assert float(jnp.abs(g["layers"]["attn"]["wo"][:, 5:]).max()) == 0.0
+    # real-head grads match the unpadded model's exactly
+    g0 = jax.grad(m.loss)(params, {"tokens": toks, "labels": toks})
+    np.testing.assert_allclose(
+        np.asarray(g["layers"]["attn"]["wq"][:, :, :5]),
+        np.asarray(g0["layers"]["attn"]["wq"]), rtol=1e-5, atol=1e-6)
+
+
+def test_gqa_mapping_preserved_under_padding():
+    """Padded model must keep each real head's original kv group."""
+    cfg = dataclasses.replace(get_smoke_config("qwen2.5-14b"),
+                              n_heads=6, n_kv_heads=2, d_head=16)
+    cfgp = dataclasses.replace(cfg, pad_heads_to=8)
+    m, mp = build_model(cfg), build_model(cfgp)
+    params = m.init(jax.random.PRNGKey(2))
+    pp = _padded_from(params, mp.init(jax.random.PRNGKey(3)), 6)
+    toks = jnp.asarray(np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (1, 12)), jnp.int32)
+    l1, _ = m.forward(params, {"tokens": toks})
+    l2, _ = mp.forward(pp, {"tokens": toks})
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))

@@ -1,0 +1,101 @@
+"""End-to-end behaviour tests: the paper's full story on one process —
+profile -> fit models -> schedule -> elastic stop/restart -> faster finish."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import CheckpointStore
+from repro.configs.resnet110 import smoke_config
+from repro.core import scheduler as S
+from repro.core.convergence import fit_convergence
+from repro.core.elastic import ElasticTrainer
+from repro.core.jobs import JobSpec
+from repro.core.resource_model import fit_resource_model
+from repro.data.synthetic import CifarLike
+from repro.models.resnet import ResNetModel
+from repro.optim.optimizers import sgd
+
+
+def test_paper_pipeline_end_to_end():
+    """(1) train and log losses; (2) fit eq.(1) to predict remaining work;
+    (3) fit eq.(5) from step-time observations; (4) scheduler doubles the
+    job; (5) elastic restart at 2x workers continues training."""
+    cfg = smoke_config()
+    model = ResNetModel(cfg)
+    data = CifarLike(size=512, seed=0)
+    with tempfile.TemporaryDirectory() as d:
+        tr = ElasticTrainer(model, sgd(), data, CheckpointStore(d),
+                            base_lr_1w=0.05, m_per_worker=16,
+                            dataset_size=512)
+        rec = tr.train_segment(w=1, n_steps=30, resume=False, log_every=1)
+
+        # (2) convergence model on the observed curve
+        steps = np.array([s for s, _, _ in rec.losses], float)
+        losses = np.array([l for _, _, l in rec.losses], float)
+        conv = fit_convergence(steps, losses)
+        assert np.isfinite(conv.loss_at(100.0))
+
+        # (3) resource model from synthetic profile points (Table-1 style)
+        ws = np.array([1, 2, 4, 8])
+        spec = JobSpec(0, 0.0, 160.0, speed_mode="analytic")
+        speeds = np.array([spec.speed(int(w)) for w in ws])
+        rm = fit_resource_model(ws, speeds, m=128, n=6.9e6)
+        assert np.all(np.diff(rm.f(ws)) > 0)
+
+        # (4) schedule: single job, ample capacity -> doubling grows it
+        jobs = [(0, 100.0, lambda w: float(rm.f(np.array([w]))[0]))]
+        alloc = S.doubling_heuristic(jobs, capacity=8, max_w=8)
+        assert alloc[0] == 8
+
+        # (5) elastic restart at the scheduler's allocation
+        rec2 = tr.train_segment(w=alloc[0], n_steps=10, resume=True,
+                                log_every=2)
+        assert rec2.epochs > rec.epochs
+        assert rec2.losses[-1][2] < rec.losses[0][2]
+
+
+def test_train_cli_loss_decreases():
+    from repro.launch.train import main
+    first, last = main(["--arch", "gemma-2b", "--smoke", "--steps", "25",
+                        "--workers", "2", "--m-per-worker", "4",
+                        "--seq", "32", "--log-every", "25"])
+    assert last < first - 0.15, (first, last)
+
+
+def test_serve_cli_generates():
+    from repro.configs import get_smoke_config
+    from repro.launch.serve import serve
+    gen, dt = serve(get_smoke_config("qwen2.5-3b"), batch=2, prompt_len=8,
+                    new_tokens=4, log=False)
+    assert gen.shape == (2, 4)
+    assert gen.dtype == np.int32
+
+
+def test_microbatch_equivalence():
+    """Gradient accumulation (k microbatches) must match the single-batch
+    step up to float association order."""
+    from repro.configs import get_smoke_config
+    from repro.engine.steps import make_train_step, init_train_state
+    from repro.models.registry import build_model
+    from repro.optim.optimizers import sgd
+
+    cfg = get_smoke_config("gemma-2b")
+    model = build_model(cfg)
+    opt = sgd(momentum=0.0, weight_decay=0.0)
+    state = init_train_state(model, opt)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)), jnp.int32)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+
+    s1 = jax.jit(make_train_step(model, opt, microbatches=1))
+    s4 = jax.jit(make_train_step(model, opt, microbatches=4))
+    st1, l1 = s1(state, batch, jnp.float32(0.1))
+    st4, l4 = s4(state, batch, jnp.float32(0.1))
+    assert abs(float(l1) - float(l4)) < 5e-3
+    for a, b in zip(jax.tree_util.tree_leaves(st1["params"]),
+                    jax.tree_util.tree_leaves(st4["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=2e-3)
