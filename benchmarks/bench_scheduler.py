@@ -1,0 +1,130 @@
+"""Scheduler hot-path benchmark: table-driven solvers + simulator vs seed.
+
+Times (a) single allocation solves, (b) full ``simulate()`` runs, and
+(c) ``run_table3`` sweeps at several job counts, each against the
+preserved reference implementations (``scheduler.*_ref`` solvers and the
+``engine="reference"`` event loop — the seed's cost profile), asserting
+allocation-for-allocation and completion-time bit-identity along the way.
+
+Writes ``BENCH_scheduler.json`` at the repo root with schema
+
+    {name: {"us_per_call": float, "speedup_vs_seed": float | null}}
+
+(``speedup_vs_seed`` is null where the reference is too slow to time).
+
+    PYTHONPATH=src python -m benchmarks.bench_scheduler
+    PYTHONPATH=src python -m benchmarks.run scheduler --json out.json
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_scheduler.json")
+
+
+def _time(fn, min_repeats: int = 3, budget_s: float = 2.0) -> float:
+    """Best-of-N wall time of fn() in seconds."""
+    best = float("inf")
+    t_start = time.perf_counter()
+    reps = 0
+    while reps < min_repeats or (time.perf_counter() - t_start < budget_s
+                                 and reps < 50):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+        reps += 1
+    return best
+
+
+def _record(results, csv, name, fast_s, seed_s=None):
+    speedup = None if seed_s is None else seed_s / fast_s
+    results[name] = {"us_per_call": fast_s * 1e6,
+                     "speedup_vs_seed": speedup}
+    csv(f"{name},{fast_s * 1e6:.0f},"
+        f"speedup_vs_seed={'%.1fx' % speedup if speedup else 'n/a'}")
+
+
+def bench_solvers(results, csv) -> None:
+    from repro.core import scheduler as S
+    from repro.core.jobs import JobSpec
+
+    for n_jobs in (10, 30, 60):
+        rng = np.random.default_rng(n_jobs)
+        specs = [JobSpec(job_id=j, arrival=0.0,
+                         epochs=float(rng.uniform(100, 200)))
+                 for j in range(n_jobs)]
+        jc = [(s.job_id, s.epochs, s.speed) for s in specs]
+        jt = [(s.job_id, s.epochs, s.speed_table(8).tolist()) for s in specs]
+        for name, table_fn, ref_fn in (
+                ("doubling", S.doubling_heuristic_table,
+                 S.doubling_heuristic_ref),
+                ("optimus", S.optimus_greedy_table, S.optimus_greedy_ref)):
+            fast_alloc = table_fn(jt, 64, max_w=8)
+            seed_alloc = ref_fn(jc, 64, max_w=8)
+            assert fast_alloc == seed_alloc, (
+                f"solver parity broken: {name} J={n_jobs}")
+            fast_s = _time(lambda: table_fn(jt, 64, max_w=8))
+            seed_s = _time(lambda: ref_fn(jc, 64, max_w=8))
+            _record(results, csv, f"solver/{name}/J={n_jobs}", fast_s,
+                    seed_s)
+
+
+def bench_simulate(results, csv) -> None:
+    from repro.core.jobs import synthetic_workload
+    from repro.core.simulator import simulate
+
+    jobs = synthetic_workload(60, 500.0, 0)
+    for strat in ("precompute", "fixed_8"):
+        fast = simulate(jobs, 64, strat, engine="table")
+        seed = simulate(jobs, 64, strat, engine="reference")
+        assert fast.completion_times == seed.completion_times, (
+            f"simulate({strat}) diverged from the seed event loop")
+        fast_s = _time(lambda: simulate(jobs, 64, strat, engine="table"),
+                       min_repeats=3)
+        seed_s = _time(lambda: simulate(jobs, 64, strat,
+                                        engine="reference"),
+                       min_repeats=1, budget_s=0.0)
+        _record(results, csv, f"simulate/60jobs/{strat}", fast_s, seed_s)
+
+
+def bench_table3(results, csv) -> None:
+    from repro.core.simulator import run_table3
+
+    # one contention level, all 6 strategies, growing job counts; the
+    # reference engine is only timed where it stays under a few seconds
+    for n_jobs, time_seed in ((20, True), (60, True), (120, False),
+                              (206, False)):
+        contention = {"sweep": (500.0, n_jobs)}
+        fast_s = _time(lambda: run_table3(seed=0, contention=contention),
+                       min_repeats=1, budget_s=1.0)
+        seed_s = None
+        if time_seed:
+            seed_s = _time(lambda: run_table3(seed=0, contention=contention,
+                                              engine="reference"),
+                           min_repeats=1, budget_s=0.0)
+        _record(results, csv, f"table3/sweep6/n={n_jobs}", fast_s, seed_s)
+
+
+def main(csv=print, write_json: bool = True) -> dict:
+    results: dict[str, dict] = {}
+    bench_solvers(results, csv)
+    bench_simulate(results, csv)
+    bench_table3(results, csv)
+    sim = results["simulate/60jobs/precompute"]["speedup_vs_seed"]
+    csv(f"scheduler/simulate_speedup_vs_seed,0,{sim:.1f}x")
+    assert sim >= 20.0, (
+        f"simulate(60 jobs) speedup regressed below 20x: {sim:.1f}x")
+    if write_json:
+        with open(JSON_PATH, "w") as fh:
+            json.dump(results, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,8 @@ unchanged (DESIGN.md §3).
 from __future__ import annotations
 
 import dataclasses
-import math
+
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,30 +29,43 @@ INFINIBAND_100G = HardwareCoefficients(
     alpha=2e-6, beta=1.0 / 12.5e9, gamma=1.0 / 50e9, name="ib_100g")
 
 
+def _log2(w):
+    """Elementwise log2 with the scalar convention lw(w<=1) = 0.
+
+    np.log2 and math.log2 agree bit-for-bit on every integer worker count
+    we ever pass (checked up to 1024), so the vectorized forms reproduce
+    the original scalar results exactly.
+    """
+    w = np.asarray(w, float)
+    return np.where(w > 1.0, np.log2(np.maximum(w, 1.0)), 0.0)
+
+
 def t_ring(m, T_fwd, T_back, w, n, hw: HardwareCoefficients = TPU_V5E):
-    """Eq. (2): ring algorithm."""
-    return (m * (T_fwd + T_back)
-            + (w - 1) * 4 * hw.alpha
-            + (w - 1) * (n / w) * 4 * hw.beta
-            + (w - 1) * (n / w) * 2 * hw.gamma)
+    """Eq. (2): ring algorithm.  ``w`` may be a scalar or an ndarray."""
+    w = np.asarray(w, float)
+    t = (m * (T_fwd + T_back)
+         + (w - 1) * 4 * hw.alpha
+         + (w - 1) * (n / w) * 4 * hw.beta
+         + (w - 1) * (n / w) * 2 * hw.gamma)
+    return float(t) if t.ndim == 0 else t
 
 
 def t_dh(m, T_fwd, T_back, w, n, hw: HardwareCoefficients = TPU_V5E):
-    """Eq. (3): doubling-halving (power-of-two w)."""
-    lw = math.log2(w) if w > 1 else 0.0
-    return (m * (T_fwd + T_back)
-            + 4 * lw * hw.alpha
-            + 4 * n * hw.beta
-            + 2.5 * n * hw.gamma)
+    """Eq. (3): doubling-halving (power-of-two w).  Scalar or ndarray w."""
+    t = (m * (T_fwd + T_back)
+         + 4 * _log2(w) * hw.alpha
+         + 4 * n * hw.beta
+         + 2.5 * n * hw.gamma)
+    return float(t) if t.ndim == 0 else t
 
 
 def t_bb(m, T_fwd, T_back, w, n, hw: HardwareCoefficients = TPU_V5E):
-    """Eq. (4): binary blocks (any w)."""
-    lw = math.ceil(math.log2(w)) if w > 1 else 0
-    return (m * (T_fwd + T_back)
-            + (5 + 4 * lw) * hw.alpha
-            + 7 * n * hw.beta
-            + 3 * n * hw.gamma)
+    """Eq. (4): binary blocks (any w).  Scalar or ndarray w."""
+    t = (m * (T_fwd + T_back)
+         + (5 + 4 * np.ceil(_log2(w))) * hw.alpha
+         + 7 * n * hw.beta
+         + 3 * n * hw.gamma)
+    return float(t) if t.ndim == 0 else t
 
 
 def step_time(m, T_fwd, T_back, w, n, hw: HardwareCoefficients = TPU_V5E,
@@ -62,6 +76,28 @@ def step_time(m, T_fwd, T_back, w, n, hw: HardwareCoefficients = TPU_V5E,
         algorithm = best_algorithm(w, n)
     fn = {"ring": t_ring, "doubling_halving": t_dh, "binary_blocks": t_bb}
     return fn[algorithm](m, T_fwd, T_back, w, n, hw)
+
+
+def step_time_table(m, T_fwd, T_back, ws, n,
+                    hw: HardwareCoefficients = TPU_V5E,
+                    threshold: float = 1e7) -> np.ndarray:
+    """Vectorized ``step_time`` over an array of worker counts.
+
+    Evaluates all three analytic models once over the whole array and
+    selects per element with the ``best_algorithm`` rule (§2.1), so a
+    full speed table costs three vectorized expressions instead of one
+    Python-level dispatch per w.
+    """
+    ws = np.asarray(ws, float)
+    wi = ws.astype(int)
+    pow2 = (wi & (wi - 1)) == 0
+    out = np.where(
+        pow2,
+        np.where(n <= threshold,
+                 t_dh(m, T_fwd, T_back, ws, n, hw),
+                 t_ring(m, T_fwd, T_back, ws, n, hw)),
+        t_bb(m, T_fwd, T_back, ws, n, hw))
+    return out
 
 
 def simulated_step_time(m, T_fwd, T_back, w, n,

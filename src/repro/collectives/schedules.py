@@ -11,6 +11,7 @@ eqs. (2)–(4) model.  The counters cross-validate the analytic cost models in
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
@@ -180,9 +181,14 @@ ALGORITHMS = {
 }
 
 
+@functools.lru_cache(maxsize=4096)
 def best_algorithm(w: int, n_bytes: float, threshold: float = 1e7) -> str:
     """Paper §2.1: doubling-halving wins for parameter sizes up to ~1e7 at
-    power-of-two w; binary blocks otherwise; ring for very large tensors."""
+    power-of-two w; binary blocks otherwise; ring for very large tensors.
+
+    LRU-cached: the scheduler hot path asks for the same (w, n) pairs over
+    and over when building analytic speed tables.
+    """
     if w & (w - 1) == 0:
         return "doubling_halving" if n_bytes <= threshold else "ring"
     return "binary_blocks"

@@ -17,9 +17,19 @@ from repro.core.convergence import nnls
 
 
 def _features(w: np.ndarray, m: float, n: float) -> np.ndarray:
+    """Feature matrix [m/w, w-1, (w-1)n/w, 1] for a batch of worker counts.
+
+    Written as four slice assignments into one preallocated array (rather
+    than ``np.stack`` of four temporaries): this is the scheduler's hot
+    constructor and the temporaries dominated the seed profile.
+    """
     w = np.asarray(w, float)
-    return np.stack([m / w, (w - 1.0), (w - 1.0) * n / w,
-                     np.ones_like(w)], axis=1)
+    out = np.empty((w.shape[0], 4))
+    out[:, 0] = m / w
+    out[:, 1] = w - 1.0
+    out[:, 2] = out[:, 1] * n / w
+    out[:, 3] = 1.0
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,6 +45,25 @@ class ResourceModel:
     def f(self, w) -> np.ndarray:
         """Training speed in epochs/second (eq. 5)."""
         t = self.seconds_per_epoch(w)
+        return 1.0 / np.maximum(t, 1e-12)
+
+    def f_pointwise(self, w) -> np.ndarray:
+        """Batch f(w) that is bit-identical to per-scalar ``f`` calls.
+
+        The one-shot matmul in ``f`` lets BLAS pick a different kernel for
+        tall feature matrices, which perturbs the last ulp relative to the
+        (1, 4) @ (4,) matvec the scalar path issues.  Speed *tables* must
+        reproduce the scalar path exactly (the simulator promises
+        bit-identical completion times), so this evaluates the batch with
+        one vectorized ``_features`` call followed by per-row ``np.dot`` —
+        the same BLAS trajectory as N scalar calls, minus the N array
+        constructions that dominated the seed profile.
+        """
+        feats = _features(np.asarray(w, float), self.m, self.n)
+        t = np.empty(feats.shape[0])
+        theta = self.theta
+        for i in range(feats.shape[0]):
+            t[i] = np.dot(feats[i], theta)
         return 1.0 / np.maximum(t, 1e-12)
 
 

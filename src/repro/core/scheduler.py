@@ -13,15 +13,37 @@ Solvers:
   * ``exact_dp``            — exact DP over worker counts (validation).
   * ``fixed``               — every job requests a constant w (§7 baselines).
 
-All solvers take jobs as (job_id, Q, speed_fn) and return {job_id: w}.
+Two API layers, one semantics:
+
+  * *Table-driven* (``doubling_heuristic_table`` & friends) take jobs as
+    (job_id, Q, speed_table) where ``speed_table[w]`` is f(w) for
+    w = 0..max index.  These are the hot path: gains come from O(1) array
+    lookups, and the doubling/greedy loops pop a lazy max-heap instead of
+    rescanning all J jobs per step.  A job's marginal gain depends only on
+    its own (Q, w), so heap entries never need recomputation: an entry is
+    pushed when the job reaches w and is simply discarded as stale if the
+    job's allocation has moved on by the time it is popped.
+  * *Callable-based* (``doubling_heuristic`` & friends) keep the original
+    (job_id, Q, speed_fn) signature as thin adapters: they sample the
+    callable once into a table and delegate.  Allocation-for-allocation
+    identical to the pre-table implementations (the ``*_ref`` versions
+    kept below for parity tests and benchmarks).
+
+Tie-breaking matches the original scan exactly: among equal best gains the
+job earliest in the input sequence wins, which the heap encodes by ordering
+entries (-gain, input_index).
 """
 from __future__ import annotations
 
+import heapq
 import math
 from typing import Callable, Sequence
 
 Alloc = dict[int, int]
 JobTuple = tuple[int, float, Callable[[int], float]]  # (id, Q, speed_fn)
+# (id, Q, speed_table) with speed_table[w] = f(w), index 0 unused (= 0.0);
+# any indexable works, but a plain list avoids ndarray-scalar overhead
+TableJobTuple = tuple[int, float, Sequence[float]]
 
 
 def _gain_double(Q: float, f, w: int) -> float:
@@ -31,8 +53,195 @@ def _gain_double(Q: float, f, w: int) -> float:
     return (t_now - t_next) / w
 
 
+def _gain_double_table(Q: float, table, w: int) -> float:
+    """Eq. 6 gain from a speed table — same float ops as ``_gain_double``."""
+    t_now = Q / max(table[w], 1e-12)
+    t_next = Q / max(table[2 * w], 1e-12)
+    return (t_now - t_next) / w
+
+
+def _table_bound(capacity: int, max_w: int | None) -> int:
+    """Largest w any solver ever evaluates: min(max_w, capacity).
+
+    Doubling only scores w -> 2w when the extra w workers still fit
+    (used + w <= capacity with used >= w, so 2w <= capacity) and
+    2w <= max_w; +1 greedy only scores w+1 <= capacity and <= max_w.
+    """
+    return min(max_w if max_w is not None else capacity, capacity)
+
+
+def _sample_table(f: Callable[[int], float], max_index: int) -> list[float]:
+    return [0.0] + [f(w) for w in range(1, max_index + 1)]
+
+
+def doubling_heuristic_table(jobs: Sequence[TableJobTuple], capacity: int,
+                             max_w: int | None = None) -> Alloc:
+    """§4.2 doubling heuristic over precomputed speed tables.
+
+    Lazy max-heap over doubling gains: O((J + doublings) log J) instead of
+    the reference implementation's O(J) rescan per doubling step.
+    """
+    jobs = list(jobs)
+    alloc: Alloc = {}
+    used = 0
+    heap: list[tuple[float, int, int]] = []   # (-gain, input index, w)
+    for idx, (jid, Q, table) in enumerate(jobs):
+        if used < capacity:
+            alloc[jid] = 1
+            used += 1
+            if (max_w is None or 2 <= max_w) and 2 < len(table):
+                g = _gain_double_table(Q, table, 1)
+                if g > 0.0:
+                    heap.append((-g, idx, 1))
+        else:
+            alloc[jid] = 0
+    heapq.heapify(heap)
+    while heap:
+        neg_g, idx, w = heapq.heappop(heap)
+        jid, Q, table = jobs[idx]
+        if alloc[jid] != w:
+            continue                      # stale: job already doubled past w
+        if used + w > capacity:
+            continue    # never feasible again (used only grows) -> discard
+        used += w
+        w2 = 2 * w
+        alloc[jid] = w2
+        if ((max_w is None or 2 * w2 <= max_w) and used + w2 <= capacity
+                and 2 * w2 < len(table)):
+            g = _gain_double_table(Q, table, w2)
+            if g > 0.0:
+                heapq.heappush(heap, (-g, idx, w2))
+    return alloc
+
+
+def optimus_greedy_table(jobs: Sequence[TableJobTuple], capacity: int,
+                         max_w: int | None = None) -> Alloc:
+    """Optimus [8] over precomputed speed tables, with a lazy max-heap."""
+    jobs = list(jobs)
+    alloc: Alloc = {}
+    used = 0
+    heap: list[tuple[float, int, int]] = []   # (-gain, input index, w)
+
+    def entry(idx: int, Q: float, table, w: int):
+        """Heap entry for the +1 gain at w, or None if never selectable."""
+        if max_w is not None and w + 1 > max_w:
+            return None
+        if w + 1 >= len(table):
+            return None    # beyond the table bound => capacity-infeasible
+        g = Q / max(table[w], 1e-12) - Q / max(table[w + 1], 1e-12)
+        return (-g, idx, w) if g > 0.0 else None
+
+    for idx, (jid, Q, table) in enumerate(jobs):
+        if used < capacity:
+            alloc[jid] = 1
+            used += 1
+            e = entry(idx, Q, table, 1)
+            if e is not None:
+                heap.append(e)
+        else:
+            alloc[jid] = 0
+    heapq.heapify(heap)
+    while used < capacity and heap:
+        neg_g, idx, w = heapq.heappop(heap)
+        jid, Q, table = jobs[idx]
+        if alloc[jid] != w:
+            continue                                   # stale entry
+        alloc[jid] = w + 1
+        used += 1
+        e = entry(idx, Q, table, w + 1)
+        if e is not None:
+            heapq.heappush(heap, e)
+    return alloc
+
+
+def exact_dp_table(jobs: Sequence[TableJobTuple], capacity: int,
+                   max_w: int | None = None,
+                   powers_of_two: bool = False) -> Alloc:
+    """Exact minimizer of Σ Q_j / f_j(w_j) by DP over capacity, from tables.
+
+    Same DP (and identical tie-breaking) as the callable version; per-job
+    costs Q/f(w) are precomputed once per job instead of re-evaluating the
+    speed model in the O(J * C * W) inner loop.
+    """
+    jobs = list(jobs)
+    J = len(jobs)
+    wmax = min(max_w or capacity, capacity)
+    choices = ([2 ** k for k in range(int(math.log2(wmax)) + 1)]
+               if powers_of_two else list(range(1, wmax + 1)))
+    assert J <= capacity, "exact_dp assumes every job can get >=1 worker (Z+)"
+    dp = {0: (0.0, ())}
+    for (jid, Q, table) in jobs:
+        costs = [Q / max(table[w], 1e-12) for w in choices]
+        ndp: dict[int, tuple[float, tuple]] = {}
+        for c, (cost, chosen) in dp.items():
+            for w, t in zip(choices, costs):
+                nc = c + w
+                if nc > capacity:
+                    continue
+                cand = (cost + t, chosen + (w,))
+                if nc not in ndp or cand[0] < ndp[nc][0]:
+                    ndp[nc] = cand
+        dp = ndp
+    best_cost, best_alloc = min(dp.values(), key=lambda kv: kv[0])
+    return {jid: w for (jid, _, _), w in zip(jobs, best_alloc)}
+
+
+# --------------------------------------------------------------------------
+# Callable-based API: thin adapters over the table solvers.
+# --------------------------------------------------------------------------
+
 def doubling_heuristic(jobs: Sequence[JobTuple], capacity: int,
                        max_w: int | None = None) -> Alloc:
+    bound = _table_bound(capacity, max_w)
+    tjobs = [(jid, Q, _sample_table(f, bound)) for (jid, Q, f) in jobs]
+    return doubling_heuristic_table(tjobs, capacity, max_w)
+
+
+def optimus_greedy(jobs: Sequence[JobTuple], capacity: int,
+                   max_w: int | None = None) -> Alloc:
+    bound = _table_bound(capacity, max_w)
+    tjobs = [(jid, Q, _sample_table(f, bound)) for (jid, Q, f) in jobs]
+    return optimus_greedy_table(tjobs, capacity, max_w)
+
+
+def exact_dp(jobs: Sequence[JobTuple], capacity: int,
+             max_w: int | None = None, powers_of_two: bool = False) -> Alloc:
+    # the DP normalizes with `max_w or capacity` (0 means unbounded, seed
+    # semantics), so the sampled table must use the same bound
+    bound = min(max_w or capacity, capacity)
+    tjobs = [(jid, Q, _sample_table(f, bound)) for (jid, Q, f) in jobs]
+    return exact_dp_table(tjobs, capacity, max_w, powers_of_two)
+
+
+def fixed(jobs: Sequence[JobTuple], capacity: int, w_fixed: int) -> Alloc:
+    """Every job requests w_fixed GPUs, granted FIFO while capacity lasts."""
+    alloc: Alloc = {}
+    used = 0
+    for (jid, _, _) in jobs:
+        w = min(w_fixed, capacity - used)
+        w = w if w == w_fixed else 0    # all-or-nothing gang allocation
+        alloc[jid] = w
+        used += w
+    return alloc
+
+
+def total_time(jobs: Sequence[JobTuple], alloc: Alloc) -> float:
+    tot = 0.0
+    for (jid, Q, f) in jobs:
+        w = alloc.get(jid, 0)
+        if w > 0:
+            tot += Q / max(f(w), 1e-12)
+    return tot
+
+
+# --------------------------------------------------------------------------
+# Reference implementations — the pre-table O(J)-rescan solvers, kept
+# verbatim for allocation-parity tests and as the "seed" side of
+# benchmarks/bench_scheduler.py speedup measurements.
+# --------------------------------------------------------------------------
+
+def doubling_heuristic_ref(jobs: Sequence[JobTuple], capacity: int,
+                           max_w: int | None = None) -> Alloc:
     jobs = list(jobs)
     alloc: Alloc = {}
     used = 0
@@ -63,9 +272,8 @@ def doubling_heuristic(jobs: Sequence[JobTuple], capacity: int,
         alloc[best] *= 2
 
 
-def optimus_greedy(jobs: Sequence[JobTuple], capacity: int,
-                   max_w: int | None = None) -> Alloc:
-    """Optimus [8]: add the single best projected worker at each step."""
+def optimus_greedy_ref(jobs: Sequence[JobTuple], capacity: int,
+                       max_w: int | None = None) -> Alloc:
     jobs = list(jobs)
     alloc: Alloc = {}
     used = 0
@@ -93,31 +301,15 @@ def optimus_greedy(jobs: Sequence[JobTuple], capacity: int,
     return alloc
 
 
-def fixed(jobs: Sequence[JobTuple], capacity: int, w_fixed: int) -> Alloc:
-    """Every job requests w_fixed GPUs, granted FIFO while capacity lasts."""
-    alloc: Alloc = {}
-    used = 0
-    for (jid, _, _) in jobs:
-        w = min(w_fixed, capacity - used)
-        w = w if w == w_fixed else 0    # all-or-nothing gang allocation
-        alloc[jid] = w
-        used += w
-    return alloc
-
-
-def exact_dp(jobs: Sequence[JobTuple], capacity: int,
-             max_w: int | None = None, powers_of_two: bool = False) -> Alloc:
-    """Exact minimizer of Σ Q_j / f_j(w_j) by DP over capacity.
-
-    Exponential-free: O(J * C * W). Small instances only (validation).
-    """
+def exact_dp_ref(jobs: Sequence[JobTuple], capacity: int,
+                 max_w: int | None = None,
+                 powers_of_two: bool = False) -> Alloc:
     jobs = list(jobs)
     J = len(jobs)
     wmax = min(max_w or capacity, capacity)
     choices = ([2 ** k for k in range(int(math.log2(wmax)) + 1)]
                if powers_of_two else list(range(1, wmax + 1)))
     assert J <= capacity, "exact_dp assumes every job can get >=1 worker (Z+)"
-    # dp[c] = (cost, alloc-tuple) best using first j jobs and c workers
     dp = {0: (0.0, ())}
     for (jid, Q, f) in jobs:
         ndp: dict[int, tuple[float, tuple]] = {}
@@ -133,12 +325,3 @@ def exact_dp(jobs: Sequence[JobTuple], capacity: int,
         dp = ndp
     best_cost, best_alloc = min(dp.values(), key=lambda kv: kv[0])
     return {jid: w for (jid, _, _), w in zip(jobs, best_alloc)}
-
-
-def total_time(jobs: Sequence[JobTuple], alloc: Alloc) -> float:
-    tot = 0.0
-    for (jid, Q, f) in jobs:
-        w = alloc.get(jid, 0)
-        if w > 0:
-            tot += Q / max(f(w), 1e-12)
-    return tot

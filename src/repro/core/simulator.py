@@ -7,12 +7,36 @@ allocation change costs the measured checkpoint-stop-restart pause (~10 s,
 §6).  The exploratory strategy gives a new job 8 GPUs for its first ten
 minutes, running 2.5 min at each of 1, 2, 4, 8 GPUs to collect the (w, f(w))
 points the resource model (eq. 5) needs.
+
+Two engines, one trajectory:
+
+  * ``engine="table"`` (default) — the hot path.  Each job's speed curve is
+    sampled once into a table at admission (``JobSpec.speed_table`` is
+    bit-identical to per-scalar ``speed`` calls), allocation is solved with
+    the table-driven lazy-heap solvers, deterministic events (reschedule
+    ticks, restart-freeze expiries) live in a heapq with lazy invalidation,
+    and the next arrival is an index into the time-sorted job list.
+    Completion estimates are deliberately *recomputed* each event: the
+    trajectory ``remaining -= dt * speed`` re-derives the completion time
+    from the current (now, remaining) pair at every event, so a cached
+    completion event would drift from the reference by one ulp per tick —
+    recomputation is what keeps the two engines bit-identical.  Pure
+    reschedule ticks skip re-solving only for ``fixed_k`` strategies, where
+    the target provably depends on nothing but the active-set order; the
+    dynamic strategies re-solve every tick because the doubling gains move
+    with ``remaining`` (on the Table-3 workloads ~20% of same-active-set
+    re-solves change the target, so skipping them would change results).
+  * ``engine="reference"`` — the original O(J)-rescan loop kept verbatim as
+    the parity oracle and the "seed" side of benchmarks/bench_scheduler.py.
+
+Both engines share the exploratory-phase gang-grant clamp (a job entering
+its explore phase reserves ``min(8, remaining capacity)`` instead of the
+old all-or-nothing 8/0 grant, which starved later explorers outright).
 """
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Callable
+import heapq
 
 import numpy as np
 
@@ -32,6 +56,9 @@ class _Active:
     w: int = 0
     frozen_until: float = 0.0     # restart pause
     explore_started: float | None = None
+    # speed table sampled once at admission (fast engine); a plain list so
+    # the event loop and solvers pay list-index cost, not ndarray-scalar
+    table: list | None = None
 
     def explore_w(self, now: float) -> int | None:
         """Worker count dictated by the explore phase, or None if done."""
@@ -62,38 +89,229 @@ class SimResult:
         return float(np.mean(jcts)) / 3600.0
 
 
+def _explore_grants(active: list[_Active], capacity: int, now: float,
+                    alloc: dict[int, int], dynamic: list[_Active]) -> int:
+    """Grant explore-phase jobs their gang reservation; returns leftover cap.
+
+    Each profiling job reserves a gang of ``min(8, remaining capacity)``
+    GPUs (clamped — the old all-or-nothing 8 grant handed later explorers
+    exactly 0 and kept them out of the dynamic pool, silently starving
+    them) and runs its schedule-dictated w inside that reservation.
+    """
+    cap = capacity
+    for a in active:
+        ew = a.explore_w(now)
+        if ew is not None:
+            grant = min(8, cap)
+            alloc[a.spec.job_id] = min(ew, grant)
+            cap -= grant
+        else:
+            dynamic.append(a)
+    return cap
+
+
 def _allocate(strategy: str, active: list[_Active], capacity: int,
               now: float) -> dict[int, int]:
-    """Target allocation for the current set of active jobs."""
+    """Target allocation for the current set of active jobs (callable path,
+    reference engine)."""
     if strategy.startswith("fixed"):
         k = int(strategy.split("_")[1])
         tuples = [(a.spec.job_id, a.remaining, a.spec.speed) for a in active]
         return sched.fixed(tuples, capacity, k)
 
     alloc: dict[int, int] = {}
-    cap = capacity
     dynamic: list[_Active] = []
     if strategy == "exploratory":
-        # explore-phase jobs hold 8 GPUs (gang) while profiling
-        for a in active:
-            ew = a.explore_w(now)
-            if ew is not None:
-                grant = 8 if cap >= 8 else 0
-                alloc[a.spec.job_id] = min(ew, grant) if grant else 0
-                cap -= grant
-            else:
-                dynamic.append(a)
+        cap = _explore_grants(active, capacity, now, alloc, dynamic)
     else:  # precompute: all jobs schedulable immediately
+        cap = capacity
         dynamic = list(active)
     tuples = [(a.spec.job_id, a.remaining, a.spec.speed) for a in dynamic]
-    alloc.update(sched.doubling_heuristic(tuples, max(cap, 0),
-                                          max_w=active[0].spec.max_w
-                                          if active else 8))
+    alloc.update(sched.doubling_heuristic_ref(tuples, cap,
+                                              max_w=active[0].spec.max_w
+                                              if active else 8))
+    return alloc
+
+
+def _allocate_table(strategy: str, active: list[_Active], capacity: int,
+                    now: float) -> dict[int, int]:
+    """Target allocation from cached speed tables (fast engine)."""
+    if strategy.startswith("fixed"):
+        k = int(strategy.split("_")[1])
+        tuples = [(a.spec.job_id, a.remaining, None) for a in active]
+        return sched.fixed(tuples, capacity, k)
+
+    alloc: dict[int, int] = {}
+    dynamic: list[_Active] = []
+    if strategy == "exploratory":
+        cap = _explore_grants(active, capacity, now, alloc, dynamic)
+    else:
+        cap = capacity
+        dynamic = active
+    assert cap >= 0, "explore gang grants exceeded cluster capacity"
+    tuples = [(a.spec.job_id, a.remaining, a.table) for a in dynamic]
+    alloc.update(sched.doubling_heuristic_table(tuples, cap,
+                                                max_w=active[0].spec.max_w
+                                                if active else 8))
     return alloc
 
 
 def simulate(jobs: list[JobSpec], capacity: int = 64,
-             strategy: str = "precompute") -> SimResult:
+             strategy: str = "precompute", engine: str = "table") -> SimResult:
+    if capacity < 1:
+        raise ValueError(f"capacity must be >= 1, got {capacity}")
+    if strategy.startswith("fixed"):
+        # stall guard: an unsatisfiable gang size means every job gets the
+        # all-or-nothing 0 grant forever and the event loop would tick on
+        # reschedules for eternity
+        k = int(strategy.split("_")[1])
+        if not 1 <= k <= capacity:
+            raise ValueError(
+                f"{strategy!r} can never run a job on a {capacity}-GPU "
+                f"cluster (gang size must be in [1, capacity])")
+    if engine == "table":
+        return _simulate_table(jobs, capacity, strategy)
+    if engine == "reference":
+        return _simulate_reference(jobs, capacity, strategy)
+    raise ValueError(f"unknown engine {engine!r}")
+
+
+# Event kinds in the fast engine's static-event heap.
+_EV_RESCHED = 0
+_EV_UNFREEZE = 1
+
+
+def _simulate_table(jobs: list[JobSpec], capacity: int,
+                    strategy: str) -> SimResult:
+    pending = sorted(jobs, key=lambda j: j.arrival)
+    n_jobs = len(pending)
+    pi = 0                        # next-arrival cursor into `pending`
+    active: list[_Active] = []
+    by_id: dict[int, _Active] = {}
+    done: dict[int, float] = {}
+    arrivals = {j.job_id: j.arrival for j in jobs}
+    now = 0.0
+    peak = 0
+    next_resched = 0.0
+    is_fixed = strategy.startswith("fixed")
+    fixed_key: tuple | None = None
+    fixed_target: dict[int, int] | None = None
+    # Static-event queue: reschedule ticks and restart-freeze expiries, with
+    # lazy invalidation (stale entries are discarded at peek time).
+    events: list[tuple[float, int, int]] = [(0.0, _EV_RESCHED, -1)]
+
+    def apply_alloc(now: float) -> None:
+        nonlocal fixed_key, fixed_target
+        if is_fixed:
+            # fixed_k targets depend only on the active-set order, so a
+            # pure reschedule tick with an unchanged set can reuse the
+            # previous solve verbatim
+            key = tuple(a.spec.job_id for a in active)
+            if key != fixed_key:
+                fixed_key = key
+                fixed_target = _allocate_table(strategy, active, capacity,
+                                               now)
+            target = fixed_target
+        else:
+            target = _allocate_table(strategy, active, capacity, now)
+        for a in active:
+            w_new = target.get(a.spec.job_id, 0)
+            if w_new != a.w:
+                a.w = w_new
+                if w_new > 0:
+                    a.frozen_until = now + RESTART_COST
+                    heapq.heappush(events, (a.frozen_until, _EV_UNFREEZE,
+                                            a.spec.job_id))
+
+    while pi < n_jobs or active:
+        # --- next event time -------------------------------------------
+        # discard stale static events, then peek the earliest valid one
+        while events:
+            t, kind, jid = events[0]
+            if kind == _EV_RESCHED:
+                if t == next_resched:
+                    break
+            else:
+                a = by_id.get(jid)
+                if (a is not None and a.w > 0 and a.frozen_until == t
+                        and t > now):
+                    break
+            heapq.heappop(events)
+        # a valid reschedule event always exists; an empty queue means the
+        # bookkeeping above lost it and the simulation would stall forever
+        assert events, "event queue drained: no reschedule event pending"
+        t_min = events[0][0]
+        if pi < n_jobs and pending[pi].arrival < t_min:
+            t_min = pending[pi].arrival
+        # completion estimates are recomputed from (now, remaining) every
+        # event on purpose — see module docstring (bit-identical trajectory)
+        for a in active:
+            if a.w > 0 and now >= a.frozen_until:
+                s = a.table[a.w]
+                if s > 0.0:
+                    est = max(now, a.frozen_until) + a.remaining / s
+                    if est < t_min:
+                        t_min = est
+        t_next = now if t_min < now else t_min
+
+        # --- advance progress -------------------------------------------
+        for a in active:
+            if a.w > 0:
+                run_from = a.frozen_until if a.frozen_until > now else now
+                dt = t_next - run_from
+                if dt > 0.0:
+                    a.remaining -= dt * a.table[a.w]
+
+        now = t_next
+
+        # --- completions -------------------------------------------------
+        finished = [a for a in active if a.remaining <= 1e-9]
+        for a in finished:
+            done[a.spec.job_id] = now
+            active.remove(a)
+            del by_id[a.spec.job_id]
+
+        # --- arrivals ----------------------------------------------------
+        arrived = False
+        while pi < n_jobs and pending[pi].arrival <= now + 1e-9:
+            j = pending[pi]
+            pi += 1
+            # table to `capacity`, not j.max_w: the solver is called with
+            # max_w = active[0].spec.max_w for *every* job (reference
+            # semantics), so with heterogeneous per-job max_w it can probe
+            # this job's speed beyond its own cap — up to min(that max_w,
+            # capacity).  A capacity-sized table covers any such probe.
+            a = _Active(spec=j, remaining=j.epochs,
+                        table=j.speed_table(capacity).tolist())
+            if strategy == "exploratory":
+                a.explore_started = now
+            active.append(a)
+            by_id[j.job_id] = a
+            arrived = True
+
+        if len(active) > peak:
+            peak = len(active)
+
+        # --- reallocation ------------------------------------------------
+        if arrived or finished or now + 1e-9 >= next_resched:
+            if active:
+                apply_alloc(now)
+            next_resched = now + RESCHEDULE_EVERY
+            heapq.heappush(events, (next_resched, _EV_RESCHED, -1))
+
+    return SimResult(strategy=strategy, completion_times=done,
+                     arrival_times=arrivals, peak_concurrency=peak)
+
+
+def _simulate_reference(jobs: list[JobSpec], capacity: int,
+                        strategy: str) -> SimResult:
+    """The pre-table event loop, kept as the parity/benchmark oracle.
+
+    O(J) candidate rescans, scalar ``JobSpec.speed`` calls throughout, list
+    pops for arrivals — the seed implementation's cost profile.  Must stay
+    behaviorally identical to ``_simulate_table`` (asserted by tests and
+    benchmarks/bench_scheduler.py).
+    """
     pending = sorted(jobs, key=lambda j: j.arrival)
     active: list[_Active] = []
     done: dict[int, float] = {}
@@ -115,10 +333,10 @@ def simulate(jobs: list[JobSpec], capacity: int = 64,
 
     while pending or active:
         # --- next event time -------------------------------------------
-        t_candidates = []
+        # next_resched is always a candidate, so the list is never empty
+        t_candidates = [next_resched]
         if pending:
             t_candidates.append(pending[0].arrival)
-        t_candidates.append(next_resched)
         for a in active:
             s = a.speed(now)
             if s > 0:
@@ -126,8 +344,6 @@ def simulate(jobs: list[JobSpec], capacity: int = 64,
                                     + a.remaining / s)
             elif a.w > 0 and a.frozen_until > now:
                 t_candidates.append(a.frozen_until)
-        if not t_candidates:
-            t_candidates = [pending[0].arrival]
         t_next = max(now, min(t_candidates))
 
         # --- advance progress -------------------------------------------
@@ -167,8 +383,8 @@ def simulate(jobs: list[JobSpec], capacity: int = 64,
 
 
 def run_table3(seed: int = 0, capacity: int = 64,
-               contention: dict[str, tuple[float, int]] | None = None
-               ) -> dict[str, dict[str, float]]:
+               contention: dict[str, tuple[float, int]] | None = None,
+               engine: str = "table") -> dict[str, dict[str, float]]:
     """Reproduce Table 3: avg JCT (hours) per strategy x contention level."""
     from repro.core.jobs import synthetic_workload
     contention = contention or {"extreme": (250.0, 206),
@@ -181,6 +397,6 @@ def run_table3(seed: int = 0, capacity: int = 64,
         jobs = synthetic_workload(n_jobs, gap, seed)
         out[level] = {}
         for s in strategies:
-            res = simulate(jobs, capacity, s)
+            res = simulate(jobs, capacity, s, engine=engine)
             out[level][s] = res.avg_jct_hours
     return out

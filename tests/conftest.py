@@ -3,6 +3,9 @@ import sys
 
 # src layout import path (so plain `pytest tests/` works too)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# tests dir itself, so `from _hypothesis_compat import ...` resolves even
+# when pytest is invoked from outside the repo root
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 # NOTE: deliberately NO --xla_force_host_platform_device_count here — smoke
 # tests and benches must see 1 device; multi-device tests spawn subprocesses.

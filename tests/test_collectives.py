@@ -2,7 +2,7 @@
 eqs. 2-4 against first-principles counters from executing the schedules)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.collectives import cost as C
 from repro.collectives.schedules import (ALGORITHMS, best_algorithm,

@@ -1,7 +1,7 @@
 """Convergence (eq. 1) and resource (eq. 5) model fitting tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.convergence import ConvergenceModel, fit_convergence, nnls
 from repro.core.resource_model import fit_resource_model

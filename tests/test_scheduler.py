@@ -2,7 +2,7 @@
 capacity safety (hypothesis), and the paper's central greedy-trap claim."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.collectives import cost as C
 from repro.core import scheduler as S

@@ -1,0 +1,126 @@
+"""Parity of the table-driven solvers with the callable/reference solvers.
+
+Property-style (randomized, seeded — no hypothesis dependency): on random
+(Q, speed-table) instances the lazy-heap table solvers must return the
+exact allocation the original O(J)-rescan implementations return, and
+``exact_dp(powers_of_two=True)`` must lower-bound the doubling heuristic's
+total time (the heuristic emits only power-of-two allocations).
+"""
+import numpy as np
+import pytest
+
+from repro.core import scheduler as S
+from repro.core.jobs import JobSpec
+
+
+def random_instance(rng, n_jobs, bound):
+    """Random jobs as (callable list, table list) over the same speeds."""
+    jobs_callable, jobs_table = [], []
+    for j in range(n_jobs):
+        Q = float(rng.uniform(50, 250))
+        speeds = np.cumsum(rng.uniform(0.05, 1.0, bound))  # increasing-ish
+        if rng.random() < 0.5:     # non-monotone tail: scaling cliffs
+            k = int(rng.integers(1, bound + 1))
+            speeds[k - 1:] *= float(rng.uniform(0.3, 1.0))
+        if rng.random() < 0.3 and bound >= 4:
+            speeds[1] = speeds[0] * 2.0   # exact-tie gains across jobs
+            speeds[3] = speeds[1] * 2.0
+        table = [0.0] + [float(s) for s in speeds]
+        jobs_callable.append((j, Q, lambda w, t=table: t[w]))
+        jobs_table.append((j, Q, table))
+    return jobs_callable, jobs_table
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_doubling_table_matches_callable(seed):
+    rng = np.random.default_rng(seed)
+    for _ in range(25):
+        n_jobs = int(rng.integers(1, 13))
+        capacity = int(rng.integers(1, 65))
+        max_w = [None, 4, 8, 16][int(rng.integers(0, 4))]
+        bound = S._table_bound(capacity, max_w)
+        jc, jt = random_instance(rng, n_jobs, bound)
+        assert (S.doubling_heuristic_table(jt, capacity, max_w)
+                == S.doubling_heuristic_ref(jc, capacity, max_w))
+        # thin adapter delegates to the same solver
+        assert (S.doubling_heuristic(jc, capacity, max_w)
+                == S.doubling_heuristic_ref(jc, capacity, max_w))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_optimus_table_matches_callable(seed):
+    rng = np.random.default_rng(100 + seed)
+    for _ in range(25):
+        n_jobs = int(rng.integers(1, 13))
+        capacity = int(rng.integers(1, 65))
+        max_w = [None, 4, 8, 16][int(rng.integers(0, 4))]
+        bound = S._table_bound(capacity, max_w)
+        jc, jt = random_instance(rng, n_jobs, bound)
+        assert (S.optimus_greedy_table(jt, capacity, max_w)
+                == S.optimus_greedy_ref(jc, capacity, max_w))
+        assert (S.optimus_greedy(jc, capacity, max_w)
+                == S.optimus_greedy_ref(jc, capacity, max_w))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_exact_dp_table_matches_callable(seed):
+    rng = np.random.default_rng(200 + seed)
+    for _ in range(10):
+        n_jobs = int(rng.integers(1, 6))
+        capacity = int(rng.integers(n_jobs, 21))
+        max_w = [None, 4, 8][int(rng.integers(0, 3))]
+        bound = S._table_bound(capacity, max_w)
+        jc, jt = random_instance(rng, n_jobs, bound)
+        for p2 in (False, True):
+            assert (S.exact_dp_table(jt, capacity, max_w, powers_of_two=p2)
+                    == S.exact_dp_ref(jc, capacity, max_w, powers_of_two=p2))
+            assert (S.exact_dp(jc, capacity, max_w, powers_of_two=p2)
+                    == S.exact_dp_ref(jc, capacity, max_w, powers_of_two=p2))
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_exact_dp_pow2_lower_bounds_doubling(seed):
+    """The doubling heuristic allocates only powers of two, so the exact DP
+    restricted to power-of-two choices can never be slower."""
+    rng = np.random.default_rng(300 + seed)
+    n_jobs = int(rng.integers(1, 6))
+    capacity = int(rng.integers(n_jobs, 33))
+    bound = S._table_bound(capacity, 8)
+    jc, jt = random_instance(rng, n_jobs, bound)
+    doubling = S.doubling_heuristic_table(jt, capacity, max_w=8)
+    assert all(w == 0 or (w & (w - 1)) == 0 for w in doubling.values())
+    exact_p2 = S.exact_dp_table(jt, capacity, max_w=8, powers_of_two=True)
+    t_exact = S.total_time(jc, exact_p2)
+    t_doub = S.total_time(jc, doubling)
+    assert t_exact <= t_doub + 1e-9
+
+
+def test_speed_table_matches_scalar_speed():
+    """JobSpec.speed_table must be bit-identical to scalar speed() calls —
+    the contract the simulator's bit-identical-trajectory promise rests on."""
+    from repro.collectives import cost as C
+    cases = [
+        dict(speed_mode="table2"),
+        dict(speed_mode="analytic"),
+        dict(speed_mode="analytic", n_bytes=4e9, max_w=64, hw=C.TPU_V5E),
+        dict(speed_mode="table2", max_w=64),
+    ]
+    for i, kw in enumerate(cases):
+        spec = JobSpec(job_id=i, arrival=0.0, epochs=150.0, **kw)
+        tab = spec.speed_table()
+        ref = np.array([spec.speed(w) for w in range(spec.max_w + 1)])
+        assert np.array_equal(tab, ref), kw
+        assert not tab.flags.writeable          # cached array is read-only
+        assert spec.speed_table() is tab        # and actually cached
+
+
+def test_adapter_preserves_greedy_trap():
+    """The callable adapter keeps the paper's §4.2 qualitative result."""
+    from repro.collectives import cost as C
+    big = JobSpec(job_id=0, arrival=0.0, epochs=150.0, n_bytes=4e9,
+                  speed_mode="analytic", max_w=64, hw=C.TPU_V5E)
+    jobs = [(0, big.epochs, big.speed)]
+    tjobs = [(0, big.epochs, big.speed_table(32).tolist())]
+    g = S.optimus_greedy_table(tjobs, 32, max_w=64)
+    d = S.doubling_heuristic_table(tjobs, 32, max_w=64)
+    assert g[0] < d[0] and d[0] >= 16

@@ -54,6 +54,88 @@ def test_more_than_halving_claim(table3):
         assert row["precompute"] * 2 < worst_fixed * 1.35, (level, row)
 
 
+def test_table_engine_matches_reference_engine():
+    """The table-driven engine must reproduce the reference event loop
+    bit-for-bit: same completion times, same peak concurrency."""
+    jobs = synthetic_workload(20, 400.0, 5)
+    for strat in ("precompute", "exploratory", "fixed_8", "fixed_2"):
+        fast = simulate(jobs, 64, strat, engine="table")
+        ref = simulate(jobs, 64, strat, engine="reference")
+        assert fast.completion_times == ref.completion_times, strat
+        assert fast.peak_concurrency == ref.peak_concurrency, strat
+
+
+def test_unknown_engine_rejected():
+    with pytest.raises(ValueError):
+        simulate(synthetic_workload(2, 100.0, 0), 8, "precompute",
+                 engine="bogus")
+
+
+def test_engines_agree_with_heterogeneous_max_w():
+    """Per-job max_w differing across the workload: the solver probes every
+    job up to active[0]'s max_w (reference semantics), so admission tables
+    must cover up to cluster capacity, not just the job's own cap."""
+    jobs = synthetic_workload(6, 300.0, 17)
+    for j, mw in zip(jobs, (8, 2, 16, 4, 8, 2)):
+        j.max_w = mw
+    for strat in ("precompute", "exploratory"):
+        fast = simulate(jobs, 24, strat, engine="table")
+        ref = simulate(jobs, 24, strat, engine="reference")
+        assert fast.completion_times == ref.completion_times, strat
+
+
+def test_unsatisfiable_fixed_gang_rejected():
+    """fixed_k with k > capacity would loop forever (every job gets the
+    all-or-nothing 0 grant at each tick); the stall guard rejects it."""
+    jobs = synthetic_workload(3, 100.0, 0)
+    with pytest.raises(ValueError, match="can never run"):
+        simulate(jobs, 4, "fixed_8")
+    with pytest.raises(ValueError, match="capacity must be"):
+        simulate(jobs, 0, "precompute")
+
+
+def test_explore_gang_grant_clamped_to_capacity():
+    """Two overlapping explore-phase jobs on a small cluster: the second
+    explorer's gang reservation is clamped to what is left instead of the
+    old all-or-nothing 8/0 grant that starved it outright."""
+    from repro.core.simulator import _Active, _allocate, _allocate_table
+
+    def make_active(jid, started):
+        spec = JobSpec(job_id=jid, arrival=0.0, epochs=100.0)
+        return _Active(spec=spec, remaining=100.0, explore_started=started,
+                       table=spec.speed_table(spec.max_w).tolist())
+
+    now = 1000.0
+    started = now - (3 * 150.0 + 1.0)       # 4th segment: explore_w == 8
+    active = [make_active(0, started), make_active(1, started)]
+    for allocate in (_allocate, _allocate_table):
+        alloc = allocate("exploratory", active, 10, now)
+        assert alloc[0] == 8                # first explorer: full gang
+        assert alloc[1] == 2                # second: clamped, not starved
+        assert sum(alloc.values()) <= 10
+
+    # with a dynamic job in the mix, the solver is handed cap >= 0 and the
+    # total grant never exceeds the cluster
+    active.append(_Active(spec=JobSpec(job_id=2, arrival=0.0, epochs=50.0),
+                          remaining=50.0,
+                          table=JobSpec(job_id=2, arrival=0.0,
+                                        epochs=50.0).speed_table(8).tolist()))
+    for allocate in (_allocate, _allocate_table):
+        alloc = allocate("exploratory", active, 10, now)
+        assert sum(alloc.values()) <= 10
+        assert all(w >= 0 for w in alloc.values())
+
+
+def test_exploratory_completes_on_small_cluster():
+    """Overlapping explorers on an 8-GPU cluster must all finish (the
+    pre-clamp code starved late arrivals of even their explore workers)."""
+    jobs = synthetic_workload(6, 200.0, 7)
+    res = simulate(jobs, 8, "exploratory")
+    assert len(res.completion_times) == 6
+    assert res.completion_times == simulate(
+        jobs, 8, "exploratory", engine="reference").completion_times
+
+
 def test_restart_cost_applied():
     """A reallocation freezes the job ~10 s; total time with dynamic
     scheduling still beats static-1 despite restarts."""
