@@ -1,10 +1,12 @@
-"""Scheduler hot-path benchmark: table-driven solvers + simulator vs seed.
+"""Scheduler hot-path benchmark: SoA solvers + simulator vs seed.
 
-Times (a) single allocation solves, (b) full ``simulate()`` runs, and
-(c) ``run_table3`` sweeps at several job counts, each against the
-preserved reference implementations (``scheduler.*_ref`` solvers and the
-``engine="reference"`` event loop — the seed's cost profile), asserting
-allocation-for-allocation and completion-time bit-identity along the way.
+Times (a) single allocation solves, (b) full ``simulate()`` runs — the
+60-job parity workload plus 1000-job traces per strategy and per workload
+pattern — and (c) ``run_table3`` sweeps at several job counts, each
+against the preserved reference implementations (``scheduler.*_ref``
+solvers and the ``engine="reference"`` event loop — the seed's cost
+profile), asserting allocation-for-allocation and completion-time
+bit-identity along the way.
 
 Writes ``BENCH_scheduler.json`` at the repo root with schema
 
@@ -13,7 +15,13 @@ Writes ``BENCH_scheduler.json`` at the repo root with schema
 (``speedup_vs_seed`` is null where the reference is too slow to time).
 
     PYTHONPATH=src python -m benchmarks.bench_scheduler
+    PYTHONPATH=src python -m benchmarks.bench_scheduler --check   # CI gate
     PYTHONPATH=src python -m benchmarks.run scheduler --json out.json
+
+``--check`` runs every parity assertion (solver allocations, engine
+completion-time bit-identity on the 60-job workload and on each workload
+pattern) but no timing loops and no JSON write — seconds, not minutes, so
+CI can gate on it per PR.
 """
 from __future__ import annotations
 
@@ -49,11 +57,37 @@ def _record(results, csv, name, fast_s, seed_s=None):
         f"speedup_vs_seed={'%.1fx' % speedup if speedup else 'n/a'}")
 
 
+def _check_solvers(n_jobs: int) -> None:
+    """Allocation parity: SoA + table solvers vs the seed ``*_ref`` scan."""
+    from repro.core import scheduler as S
+    from repro.core.jobs import JobSpec
+
+    rng = np.random.default_rng(n_jobs)
+    specs = [JobSpec(job_id=j, arrival=0.0,
+                     epochs=float(rng.uniform(100, 200)))
+             for j in range(n_jobs)]
+    jc = [(s.job_id, s.epochs, s.speed) for s in specs]
+    jt = [(s.job_id, s.epochs, s.speed_table(8).tolist()) for s in specs]
+    for name, table_fn, ref_fn in (
+            ("doubling", S.doubling_heuristic_table,
+             S.doubling_heuristic_ref),
+            ("optimus", S.optimus_greedy_table, S.optimus_greedy_ref)):
+        assert table_fn(jt, 64, max_w=8) == ref_fn(jc, 64, max_w=8), (
+            f"solver parity broken: {name} J={n_jobs}")
+    Q = np.array([s.epochs for s in specs])
+    tables = np.stack([s.speed_table(8) for s in specs])
+    soa = S.doubling_heuristic_soa(Q, tables, 64, max_w=8)
+    want = S.doubling_heuristic_ref(jc, 64, max_w=8)
+    assert {s.job_id: int(w) for s, w in zip(specs, soa)} == want, (
+        f"SoA solver parity broken: doubling J={n_jobs}")
+
+
 def bench_solvers(results, csv) -> None:
     from repro.core import scheduler as S
     from repro.core.jobs import JobSpec
 
     for n_jobs in (10, 30, 60):
+        _check_solvers(n_jobs)
         rng = np.random.default_rng(n_jobs)
         specs = [JobSpec(job_id=j, arrival=0.0,
                          epochs=float(rng.uniform(100, 200)))
@@ -64,32 +98,81 @@ def bench_solvers(results, csv) -> None:
                 ("doubling", S.doubling_heuristic_table,
                  S.doubling_heuristic_ref),
                 ("optimus", S.optimus_greedy_table, S.optimus_greedy_ref)):
-            fast_alloc = table_fn(jt, 64, max_w=8)
-            seed_alloc = ref_fn(jc, 64, max_w=8)
-            assert fast_alloc == seed_alloc, (
-                f"solver parity broken: {name} J={n_jobs}")
             fast_s = _time(lambda: table_fn(jt, 64, max_w=8))
             seed_s = _time(lambda: ref_fn(jc, 64, max_w=8))
             _record(results, csv, f"solver/{name}/J={n_jobs}", fast_s,
                     seed_s)
 
 
-def bench_simulate(results, csv) -> None:
+PARITY_STRATEGIES = ("precompute", "exploratory", "fixed_8")
+
+
+def _check_simulate_parity() -> None:
+    """60-job engine bit-identity, all three strategies (the CI gate)."""
     from repro.core.jobs import synthetic_workload
     from repro.core.simulator import simulate
 
     jobs = synthetic_workload(60, 500.0, 0)
-    for strat in ("precompute", "fixed_8"):
+    for strat in PARITY_STRATEGIES:
         fast = simulate(jobs, 64, strat, engine="table")
         seed = simulate(jobs, 64, strat, engine="reference")
         assert fast.completion_times == seed.completion_times, (
             f"simulate({strat}) diverged from the seed event loop")
+        assert fast.peak_concurrency == seed.peak_concurrency, strat
+
+
+def _check_pattern_parity(n_jobs: int = 40) -> None:
+    """Engine bit-identity on every workload pattern (smaller traces — the
+    reference engine is the slow side)."""
+    from repro.core.jobs import WORKLOAD_PATTERNS, make_workload
+    from repro.core.simulator import simulate
+
+    for pattern in sorted(WORKLOAD_PATTERNS):
+        jobs = make_workload(pattern, n_jobs, 500.0, 3)
+        for strat in ("precompute", "exploratory"):
+            fast = simulate(jobs, 64, strat, engine="table")
+            seed = simulate(jobs, 64, strat, engine="reference")
+            assert fast.completion_times == seed.completion_times, (
+                f"simulate({strat}) diverged on pattern {pattern!r}")
+
+
+def bench_simulate(results, csv) -> None:
+    from repro.core.jobs import synthetic_workload
+    from repro.core.simulator import simulate
+
+    _check_simulate_parity()
+    jobs = synthetic_workload(60, 500.0, 0)
+    for strat in ("precompute", "fixed_8"):
         fast_s = _time(lambda: simulate(jobs, 64, strat, engine="table"),
                        min_repeats=3)
         seed_s = _time(lambda: simulate(jobs, 64, strat,
                                         engine="reference"),
                        min_repeats=1, budget_s=0.0)
         _record(results, csv, f"simulate/60jobs/{strat}", fast_s, seed_s)
+
+
+def bench_1000jobs(results, csv) -> None:
+    """Thousand-job traces: per strategy on the Poisson trace, then
+    precompute across every workload pattern.  No reference timing — the
+    seed loop would take tens of minutes per run."""
+    from repro.core.jobs import WORKLOAD_PATTERNS, make_workload
+    from repro.core.simulator import simulate
+
+    jobs = make_workload("poisson", 1000, 250.0, 0)
+    for strat in PARITY_STRATEGIES:
+        res = simulate(jobs, 64, strat)
+        assert len(res.completion_times) == 1000, (
+            f"simulate(1000 jobs, {strat}) lost jobs")
+        fast_s = _time(lambda: simulate(jobs, 64, strat),
+                       min_repeats=1, budget_s=2.0)
+        _record(results, csv, f"simulate/1000jobs/{strat}", fast_s)
+    for pattern in sorted(WORKLOAD_PATTERNS):
+        if pattern == "poisson":
+            continue        # covered above
+        pjobs = make_workload(pattern, 1000, 250.0, 0)
+        fast_s = _time(lambda: simulate(pjobs, 64, "precompute"),
+                       min_repeats=1, budget_s=2.0)
+        _record(results, csv, f"simulate/1000jobs/{pattern}", fast_s)
 
 
 def bench_table3(results, csv) -> None:
@@ -110,10 +193,32 @@ def bench_table3(results, csv) -> None:
         _record(results, csv, f"table3/sweep6/n={n_jobs}", fast_s, seed_s)
 
 
+def check(csv=print) -> None:
+    """Parity-only mode for CI: every correctness assertion the timed
+    benchmark makes, none of the timing loops, no JSON write."""
+    t0 = time.perf_counter()
+    for n_jobs in (10, 30, 60):
+        _check_solvers(n_jobs)
+    csv("check/solver_parity,0,ok")
+    _check_simulate_parity()
+    csv("check/simulate_60jobs_parity,0,ok")
+    _check_pattern_parity()
+    csv("check/pattern_parity,0,ok")
+    from repro.core.jobs import make_workload
+    from repro.core.simulator import simulate
+    jobs = make_workload("poisson", 1000, 250.0, 0)
+    for strat in PARITY_STRATEGIES:
+        res = simulate(jobs, 64, strat)
+        assert len(res.completion_times) == 1000, strat
+    csv("check/simulate_1000jobs_completes,0,ok")
+    csv(f"check/wall_us,{(time.perf_counter() - t0) * 1e6:.0f},done")
+
+
 def main(csv=print, write_json: bool = True) -> dict:
     results: dict[str, dict] = {}
     bench_solvers(results, csv)
     bench_simulate(results, csv)
+    bench_1000jobs(results, csv)
     bench_table3(results, csv)
     sim = results["simulate/60jobs/precompute"]["speedup_vs_seed"]
     csv(f"scheduler/simulate_speedup_vs_seed,0,{sim:.1f}x")
@@ -127,4 +232,8 @@ def main(csv=print, write_json: bool = True) -> dict:
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    if "--check" in sys.argv[1:]:
+        check()
+    else:
+        main()

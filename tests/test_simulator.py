@@ -72,9 +72,10 @@ def test_unknown_engine_rejected():
 
 
 def test_engines_agree_with_heterogeneous_max_w():
-    """Per-job max_w differing across the workload: the solver probes every
-    job up to active[0]'s max_w (reference semantics), so admission tables
-    must cover up to cluster capacity, not just the job's own cap."""
+    """Per-job max_w differing across the workload: both engines pass
+    per-job caps to the doubling solvers (a max_w=2 job is never doubled
+    past 2 even while a max_w=16 neighbour grows to 16) and must stay
+    bit-identical to each other."""
     jobs = synthetic_workload(6, 300.0, 17)
     for j, mw in zip(jobs, (8, 2, 16, 4, 8, 2)):
         j.max_w = mw

@@ -5,6 +5,7 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint.store import CheckpointStore
 from repro.configs.resnet110 import smoke_config
@@ -16,6 +17,10 @@ from repro.core.resource_model import fit_resource_model
 from repro.data.synthetic import CifarLike
 from repro.models.resnet import ResNetModel
 from repro.optim.optimizers import sgd
+
+# Full training loops + CLI subprocesses: minutes, not seconds — keep the
+# whole module out of the fast CI lane.
+pytestmark = pytest.mark.slow
 
 
 def test_paper_pipeline_end_to_end():

@@ -1,0 +1,177 @@
+"""Workload-pattern library (jobs.py): determinism, arrival monotonicity,
+pattern-specific shape properties, engine parity per pattern, and
+thousand-job-scale smoke runs of the SoA simulator."""
+import numpy as np
+import pytest
+
+from repro.core.jobs import (WORKLOAD_PATTERNS, bursty_workload,
+                             diurnal_workload, heavy_tailed_workload,
+                             make_workload, mixed_maxw_workload,
+                             synthetic_workload)
+from repro.core.simulator import simulate
+
+PATTERNS = sorted(WORKLOAD_PATTERNS)
+
+
+# --------------------------------------------------------------------------
+# Library-wide contracts
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_deterministic_per_seed(pattern):
+    a = make_workload(pattern, 50, 400.0, seed=7)
+    b = make_workload(pattern, 50, 400.0, seed=7)
+    assert [(j.arrival, j.epochs, j.max_w) for j in a] == \
+           [(j.arrival, j.epochs, j.max_w) for j in b]
+    c = make_workload(pattern, 50, 400.0, seed=8)
+    assert [(j.arrival, j.epochs) for j in a] != \
+           [(j.arrival, j.epochs) for j in c]
+
+
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_arrivals_monotone_ids_sequential(pattern):
+    jobs = make_workload(pattern, 80, 300.0, seed=2)
+    assert len(jobs) == 80
+    arrivals = [j.arrival for j in jobs]
+    assert all(a <= b for a, b in zip(arrivals, arrivals[1:]))
+    assert arrivals[0] > 0.0
+    assert [j.job_id for j in jobs] == list(range(80))
+    assert all(j.epochs > 0 for j in jobs)
+
+
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_long_run_rate_matches_gap(pattern):
+    """Every pattern keeps the average interarrival near the requested gap
+    so per-pattern JCTs are comparable at a given contention level."""
+    gap = 300.0
+    jobs = make_workload(pattern, 600, gap, seed=11)
+    mean_gap = jobs[-1].arrival / len(jobs)
+    assert 0.6 * gap < mean_gap < 1.6 * gap, mean_gap
+
+
+def test_unknown_pattern_rejected():
+    with pytest.raises(ValueError, match="unknown workload pattern"):
+        make_workload("fractal", 10, 100.0, 0)
+
+
+def test_poisson_pattern_is_the_paper_trace():
+    """make_workload('poisson') must stay bit-identical to the §7 generator
+    Table 3 is built on."""
+    via_registry = make_workload("poisson", 40, 500.0, 0)
+    direct = synthetic_workload(40, 500.0, 0)
+    assert [(j.arrival, j.epochs) for j in via_registry] == \
+           [(j.arrival, j.epochs) for j in direct]
+
+
+# --------------------------------------------------------------------------
+# Pattern-specific shape properties
+# --------------------------------------------------------------------------
+
+def test_bursty_arrivals_cluster():
+    jobs = bursty_workload(200, 300.0, seed=3, burst_mean=5.0)
+    arrivals = [j.arrival for j in jobs]
+    n_instants = len(set(arrivals))
+    # bursts land at a single instant: far fewer distinct arrival times
+    # than jobs, and the mean burst size is near burst_mean
+    assert n_instants < len(jobs) // 2
+    assert 2.0 < len(jobs) / n_instants < 10.0
+    # at least one burst is large enough to slam the scheduler at once
+    _, counts = np.unique(arrivals, return_counts=True)
+    assert counts.max() >= 8
+
+
+def test_diurnal_rate_modulates_with_phase():
+    period = 86_400.0
+    jobs = diurnal_workload(2000, 200.0, seed=4, period=period,
+                            amplitude=0.75)
+    phase = np.array([j.arrival % period for j in jobs])
+    # sin > 0 (higher rate) over the first half-period
+    hi = int((phase < period / 2).sum())
+    lo = len(jobs) - hi
+    assert hi > 1.5 * lo, (hi, lo)
+
+
+def test_diurnal_amplitude_validated():
+    with pytest.raises(ValueError, match="amplitude"):
+        diurnal_workload(10, 100.0, 0, amplitude=1.2)
+
+
+def test_heavy_tailed_epochs_pareto():
+    jobs = heavy_tailed_workload(1500, 300.0, seed=5, alpha=1.8,
+                                 epoch_scale=60.0, epoch_cap=2000.0)
+    epochs = np.array([j.epochs for j in jobs])
+    assert epochs.min() >= 60.0          # classic Pareto: x >= x_m
+    assert epochs.max() <= 2000.0        # cap respected
+    # heavy tail: the max dwarfs the median, mean >> median
+    assert np.median(epochs) < 120.0
+    assert epochs.max() > 10 * np.median(epochs)
+    assert epochs.mean() > 1.2 * np.median(epochs)
+
+
+def test_mixed_maxw_fleet_heterogeneous():
+    jobs = mixed_maxw_workload(120, 300.0, seed=6, maxw_choices=(2, 4, 8, 16))
+    caps = {j.max_w for j in jobs}
+    assert caps <= {2, 4, 8, 16}
+    assert len(caps) >= 3                # genuinely mixed fleet
+    # other patterns keep the paper's single-node cap
+    assert all(j.max_w == 8 for j in synthetic_workload(10, 300.0, 6))
+
+
+def test_mixed_maxw_caps_enforced_by_scheduler():
+    """The simulator must honor per-job caps: in a 2-job fleet with ample
+    capacity, the capped job stays at its max_w while the big job scales
+    out — the whole point of the mixed_maxw pattern."""
+    from repro.core.jobs import JobSpec
+
+    jobs = [JobSpec(job_id=0, arrival=1.0, epochs=150.0, max_w=2),
+            JobSpec(job_id=1, arrival=1.0, epochs=150.0, max_w=16)]
+    res = simulate(jobs, 32, "precompute")
+    ref = simulate(jobs, 32, "precompute", engine="reference")
+    assert res.completion_times == ref.completion_times
+    # same work, same arrival: the max_w=16 job finishes strictly first
+    assert res.completion_times[1] < res.completion_times[0]
+    # and the capped job ran at exactly w=2 between restarts:
+    # JCT ~ restart + epochs / speed(2)
+    spec = jobs[0]
+    expect = 1.0 + 10.0 + 150.0 / spec.speed(2)
+    assert abs(res.completion_times[0] - expect) < 15.0
+
+
+# --------------------------------------------------------------------------
+# Simulator integration: engine parity per pattern + 1000-job scale
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_engines_bit_identical_per_pattern(pattern):
+    """The SoA engine must reproduce the reference event loop bit-for-bit
+    on every workload pattern, not just the paper's Poisson trace."""
+    jobs = make_workload(pattern, 25, 400.0, seed=9)
+    for strat in ("precompute", "exploratory", "fixed_4"):
+        fast = simulate(jobs, 32, strat, engine="table")
+        ref = simulate(jobs, 32, strat, engine="reference")
+        assert fast.completion_times == ref.completion_times, (pattern,
+                                                               strat)
+        assert fast.peak_concurrency == ref.peak_concurrency, (pattern,
+                                                               strat)
+
+
+@pytest.mark.parametrize("strategy", ["precompute", "exploratory",
+                                      "fixed_8"])
+def test_1000_job_trace_completes(strategy):
+    """Thousand-job Poisson trace per strategy: every job admitted and
+    completed after its arrival, and peak concurrency stays bounded."""
+    jobs = synthetic_workload(1000, 250.0, seed=0)
+    res = simulate(jobs, 64, strategy)
+    assert len(res.completion_times) == 1000
+    arr = {j.job_id: j.arrival for j in jobs}
+    assert all(res.completion_times[j] > arr[j]
+               for j in res.completion_times)
+    assert res.peak_concurrency <= 1000
+    assert res.avg_jct_hours > 0.0
+
+
+@pytest.mark.parametrize("pattern", [p for p in PATTERNS if p != "poisson"])
+def test_1000_job_trace_completes_per_pattern(pattern):
+    jobs = make_workload(pattern, 1000, 250.0, seed=0)
+    res = simulate(jobs, 64, "precompute")
+    assert len(res.completion_times) == 1000
