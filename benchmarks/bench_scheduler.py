@@ -3,10 +3,12 @@
 Times (a) single allocation solves, (b) full ``simulate()`` runs — the
 60-job parity workload plus 1000-job traces per strategy and per workload
 pattern — and (c) ``run_table3`` sweeps at several job counts, each
-against the preserved reference implementations (``scheduler.*_ref``
-solvers and the ``engine="reference"`` event loop — the seed's cost
-profile), asserting allocation-for-allocation and completion-time
-bit-identity along the way.
+against the preserved reference implementations (the
+``repro.core._reference`` parity oracle: the seed ``*_ref`` solvers and
+the ``engine="reference"`` event loop — the seed's cost profile),
+asserting allocation-for-allocation and completion-time bit-identity
+along the way.  The engine-parity gates iterate the policy registry, so
+a newly registered policy is parity-checked automatically.
 
 Writes ``BENCH_scheduler.json`` at the repo root with schema
 
@@ -59,6 +61,7 @@ def _record(results, csv, name, fast_s, seed_s=None):
 
 def _check_solvers(n_jobs: int) -> None:
     """Allocation parity: SoA + table solvers vs the seed ``*_ref`` scan."""
+    from repro.core import _reference as R
     from repro.core import scheduler as S
     from repro.core.jobs import JobSpec
 
@@ -70,19 +73,20 @@ def _check_solvers(n_jobs: int) -> None:
     jt = [(s.job_id, s.epochs, s.speed_table(8).tolist()) for s in specs]
     for name, table_fn, ref_fn in (
             ("doubling", S.doubling_heuristic_table,
-             S.doubling_heuristic_ref),
-            ("optimus", S.optimus_greedy_table, S.optimus_greedy_ref)):
+             R.doubling_heuristic_ref),
+            ("optimus", S.optimus_greedy_table, R.optimus_greedy_ref)):
         assert table_fn(jt, 64, max_w=8) == ref_fn(jc, 64, max_w=8), (
             f"solver parity broken: {name} J={n_jobs}")
     Q = np.array([s.epochs for s in specs])
     tables = np.stack([s.speed_table(8) for s in specs])
     soa = S.doubling_heuristic_soa(Q, tables, 64, max_w=8)
-    want = S.doubling_heuristic_ref(jc, 64, max_w=8)
+    want = R.doubling_heuristic_ref(jc, 64, max_w=8)
     assert {s.job_id: int(w) for s, w in zip(specs, soa)} == want, (
         f"SoA solver parity broken: doubling J={n_jobs}")
 
 
 def bench_solvers(results, csv) -> None:
+    from repro.core import _reference as R
     from repro.core import scheduler as S
     from repro.core.jobs import JobSpec
 
@@ -96,8 +100,8 @@ def bench_solvers(results, csv) -> None:
         jt = [(s.job_id, s.epochs, s.speed_table(8).tolist()) for s in specs]
         for name, table_fn, ref_fn in (
                 ("doubling", S.doubling_heuristic_table,
-                 S.doubling_heuristic_ref),
-                ("optimus", S.optimus_greedy_table, S.optimus_greedy_ref)):
+                 R.doubling_heuristic_ref),
+                ("optimus", S.optimus_greedy_table, R.optimus_greedy_ref)):
             fast_s = _time(lambda: table_fn(jt, 64, max_w=8))
             seed_s = _time(lambda: ref_fn(jc, 64, max_w=8))
             _record(results, csv, f"solver/{name}/J={n_jobs}", fast_s,
@@ -108,17 +112,40 @@ PARITY_STRATEGIES = ("precompute", "exploratory", "fixed_8")
 
 
 def _check_simulate_parity() -> None:
-    """60-job engine bit-identity, all three strategies (the CI gate)."""
+    """60-job engine bit-identity for every registered policy (the CI
+    gate).  Iterating ``registered_policies()`` means a newly registered
+    policy is parity-gated automatically — no benchmark edit needed."""
     from repro.core.jobs import synthetic_workload
+    from repro.core.scheduler import registered_policies
     from repro.core.simulator import simulate
 
     jobs = synthetic_workload(60, 500.0, 0)
-    for strat in PARITY_STRATEGIES:
+    for strat in registered_policies().values():
         fast = simulate(jobs, 64, strat, engine="table")
         seed = simulate(jobs, 64, strat, engine="reference")
         assert fast.completion_times == seed.completion_times, (
             f"simulate({strat}) diverged from the seed event loop")
         assert fast.peak_concurrency == seed.peak_concurrency, strat
+
+
+def _check_cluster_parity(n_jobs: int = 40) -> None:
+    """Engine bit-identity on a non-flat ClusterModel (multi-node topology
+    + GADGET-style contention), every registered policy."""
+    from repro.collectives.cost import ClusterModel
+    from repro.core.jobs import synthetic_workload
+    from repro.core.scheduler import registered_policies
+    from repro.core.simulator import simulate
+
+    cluster = ClusterModel(capacity=64, gpus_per_node=8,
+                           inter_node_beta=1.0 / 1.25e9,
+                           contention_penalty=0.05)
+    jobs = synthetic_workload(n_jobs, 500.0, 1)
+    for strat in registered_policies().values():
+        fast = simulate(jobs, strategy=strat, cluster=cluster)
+        seed = simulate(jobs, strategy=strat, cluster=cluster,
+                        engine="reference")
+        assert fast.completion_times == seed.completion_times, (
+            f"simulate({strat}) diverged on the non-flat cluster")
 
 
 def _check_pattern_parity(n_jobs: int = 40) -> None:
@@ -152,14 +179,15 @@ def bench_simulate(results, csv) -> None:
 
 
 def bench_1000jobs(results, csv) -> None:
-    """Thousand-job traces: per strategy on the Poisson trace, then
-    precompute across every workload pattern.  No reference timing — the
-    seed loop would take tens of minutes per run."""
+    """Thousand-job traces: every registered policy on the Poisson trace,
+    then precompute across every workload pattern.  No reference timing —
+    the seed loop would take tens of minutes per run."""
     from repro.core.jobs import WORKLOAD_PATTERNS, make_workload
+    from repro.core.scheduler import registered_policies
     from repro.core.simulator import simulate
 
     jobs = make_workload("poisson", 1000, 250.0, 0)
-    for strat in PARITY_STRATEGIES:
+    for strat in registered_policies().values():
         res = simulate(jobs, 64, strat)
         assert len(res.completion_times) == 1000, (
             f"simulate(1000 jobs, {strat}) lost jobs")
@@ -176,10 +204,12 @@ def bench_1000jobs(results, csv) -> None:
 
 
 def bench_table3(results, csv) -> None:
-    from repro.core.simulator import run_table3
+    from repro.core.simulator import TABLE3_STRATEGIES, run_table3
 
-    # one contention level, all 6 strategies, growing job counts; the
-    # reference engine is only timed where it stays under a few seconds
+    # one contention level, the full strategy sweep (the paper's six plus
+    # the registry extensions), growing job counts; the reference engine
+    # is only timed where it stays under a few seconds
+    n_strats = len(TABLE3_STRATEGIES)
     for n_jobs, time_seed in ((20, True), (60, True), (120, False),
                               (206, False)):
         contention = {"sweep": (500.0, n_jobs)}
@@ -190,7 +220,8 @@ def bench_table3(results, csv) -> None:
             seed_s = _time(lambda: run_table3(seed=0, contention=contention,
                                               engine="reference"),
                            min_repeats=1, budget_s=0.0)
-        _record(results, csv, f"table3/sweep6/n={n_jobs}", fast_s, seed_s)
+        _record(results, csv, f"table3/sweep{n_strats}/n={n_jobs}", fast_s,
+                seed_s)
 
 
 def check(csv=print) -> None:
@@ -204,10 +235,16 @@ def check(csv=print) -> None:
     csv("check/simulate_60jobs_parity,0,ok")
     _check_pattern_parity()
     csv("check/pattern_parity,0,ok")
+    _check_cluster_parity()
+    csv("check/cluster_parity,0,ok")
     from repro.core.jobs import make_workload
+    from repro.core.scheduler import registered_policies
     from repro.core.simulator import simulate
+    # every registered policy — not just the timed subset — must finish a
+    # 1000-job trace (catches policies that stall or lose jobs only at
+    # high concurrency)
     jobs = make_workload("poisson", 1000, 250.0, 0)
-    for strat in PARITY_STRATEGIES:
+    for strat in registered_policies().values():
         res = simulate(jobs, 64, strat)
         assert len(res.completion_times) == 1000, strat
     csv("check/simulate_1000jobs_completes,0,ok")

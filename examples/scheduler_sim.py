@@ -1,7 +1,9 @@
-"""Scheduler simulation (paper §7 / Table 3): 64-GPU cluster, six
-strategies — the paper's Poisson trace against its published numbers, then
+"""Scheduler simulation (paper §7 / Table 3): 64-GPU cluster, the paper's
+six strategies plus the registry extensions (SRTF, GADGET-style utility
+greedy) — the paper's Poisson trace against its published numbers, then
 the same sweep across the workload-pattern library (bursty / diurnal /
-heavy-tailed / mixed max_w fleets) at moderate contention.
+heavy-tailed / mixed max_w fleets) at moderate contention, and the
+multi-node contention scenario where the flat-cluster ranking reshuffles.
 
   PYTHONPATH=src python examples/scheduler_sim.py
 """
@@ -10,26 +12,32 @@ import sys
 sys.path.insert(0, "src")
 sys.path.insert(0, ".")     # for the benchmarks package (repo root)
 
-from repro.core.simulator import run_table3
+from repro.core.simulator import TABLE3_STRATEGIES, run_table3
 
 PAPER = {
     "extreme": [7.63, 20.42, 22.76, 12.90, 11.49, 10.10],
     "moderate": [2.63, 2.92, 6.20, 3.50, 4.58, 6.32],
     "none": [1.40, 1.47, 1.40, 2.21, 3.78, 6.37],
 }
-STRATS = ["precompute", "exploratory", "fixed_8", "fixed_4", "fixed_2",
-          "fixed_1"]
+STRATS = list(TABLE3_STRATEGIES)
+
+
+def _header():
+    print(f"{'':12s}" + "".join(f"{s:>15s}" for s in STRATS))
 
 
 def main():
     ours = run_table3(seed=0)
-    print(f"{'':12s}" + "".join(f"{s:>13s}" for s in STRATS))
+    _header()
     for level in ("extreme", "moderate", "none"):
         row = ours[level]
-        print(f"{level:12s}" + "".join(f"{row[s]:13.2f}" for s in STRATS)
+        print(f"{level:12s}" + "".join(f"{row[s]:15.2f}" for s in STRATS)
               + "   (ours, h)")
-        print(f"{'':12s}" + "".join(f"{v:13.2f}" for v in PAPER[level])
-              + "   (paper, h)")
+        # registry extensions have no paper column — pad with em dashes
+        pad = "".join(f"{'—':>15s}" for _ in
+                      range(len(STRATS) - len(PAPER[level])))
+        print(f"{'':12s}" + "".join(f"{v:15.2f}" for v in PAPER[level])
+              + pad + "   (paper, h)")
     m = ours["moderate"]
     print(f"\nmoderate contention: precompute is "
           f"{m['fixed_8']/m['precompute']:.2f}x faster than fixed-8 "
@@ -37,15 +45,27 @@ def main():
 
     # same sweep the benchmark publishes (single source for the
     # moderate-contention point)
-    from benchmarks.table3_scheduler_sim import run_patterns
+    from benchmarks.table3_scheduler_sim import run_multinode, run_patterns
 
     print(f"\nper-pattern sweep (moderate contention, avg JCT h):")
-    print(f"{'':12s}" + "".join(f"{s:>13s}" for s in STRATS))
+    _header()
     for pattern, row in run_patterns(seed=0).items():
-        print(f"{pattern:12s}" + "".join(f"{row[s]:13.2f}" for s in STRATS))
+        print(f"{pattern:12s}" + "".join(f"{row[s]:15.2f}" for s in STRATS))
     print("\n(the abstract's 'more than halves average job time on some "
           "workload patterns'\n holds wherever precompute is <= half the "
           "worst fixed-w column)")
+
+    print("\nmulti-node cluster (8-GPU nodes, 10x slower cross-node links, "
+          "5% contention\npenalty per concurrent ring — "
+          "benchmarks.table3_scheduler_sim.MULTINODE):")
+    _header()
+    mrow = run_multinode(seed=0)
+    print(f"{'moderate':12s}" + "".join(f"{mrow[s]:15.2f}" for s in STRATS))
+    best = min(mrow, key=mrow.get)
+    print(f"\nonce placement and contention enter the model the flat-cluster "
+          f"ranking is not\na given (GADGET's point): best here is "
+          f"{best} at {mrow[best]:.2f} h vs precompute's "
+          f"{mrow['precompute']:.2f} h.")
 
 
 if __name__ == "__main__":

@@ -14,6 +14,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.collectives.schedules import ALGORITHMS, best_algorithm
+
 
 @dataclasses.dataclass(frozen=True)
 class HardwareCoefficients:
@@ -27,6 +29,92 @@ TPU_V5E = HardwareCoefficients()
 # The paper's cluster: 100 Gbit/s (4x EDR) InfiniBand, K40m-era hosts.
 INFINIBAND_100G = HardwareCoefficients(
     alpha=2e-6, beta=1.0 / 12.5e9, gamma=1.0 / 50e9, name="ib_100g")
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterModel:
+    """The cluster the §7 simulation schedules over.
+
+    The paper treats the cluster as a flat homogeneous GPU count; GADGET
+    (arXiv 2202.01158) and the multi-tenant contention follow-up (arXiv
+    2207.07817) show ring-all-reduce scheduling changes materially once
+    placement, link bandwidth and communication contention enter the
+    model.  This dataclass owns all of it:
+
+      * ``capacity`` — total GPUs (the paper's C).
+      * ``hw`` — intra-node :class:`HardwareCoefficients` (α/β/γ).
+      * ``gpus_per_node`` / ``inter_node_beta`` — optional node topology.
+        A job whose ring spans nodes (w > gpus_per_node) pays the slower
+        cross-node per-byte time ``inter_node_beta`` instead of ``hw.beta``;
+        its speed table is scaled by the analytic intra/inter step-time
+        ratio (see ``JobSpec.speed_table``).  ``None`` (the default) is
+        the paper's flat single-fabric cluster.
+      * ``contention_penalty`` — GADGET-style multi-tenant link sharing:
+        when k concurrent jobs run ring all-reduce (w >= 2), each of them
+        progresses at ``contention_factor(k) = 1 / (1 + penalty*(k-1))``
+        of its nominal speed.  0.0 (default) disables it.
+      * ``restart_cost`` — checkpoint-stop-restart pause per reallocation
+        (~10 s measured, paper §6).
+
+    A flat homogeneous ClusterModel (defaults) reproduces the paper setup
+    bit-identically — the engines and speed tables take the exact same
+    code paths as a bare integer capacity.
+    """
+    capacity: int = 64
+    hw: HardwareCoefficients = INFINIBAND_100G
+    gpus_per_node: int | None = None
+    inter_node_beta: float | None = None
+    contention_penalty: float = 0.0
+    restart_cost: float = 10.0
+
+    def __post_init__(self):
+        if self.capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {self.capacity}")
+        if self.gpus_per_node is not None:
+            if self.gpus_per_node < 1:
+                raise ValueError(
+                    f"gpus_per_node must be >= 1, got {self.gpus_per_node}")
+            if self.inter_node_beta is None:
+                raise ValueError(
+                    "a multi-node ClusterModel needs inter_node_beta "
+                    "(cross-node per-byte transfer time)")
+            if self.inter_node_beta < self.hw.beta:
+                raise ValueError(
+                    "inter_node_beta is faster than the intra-node link "
+                    f"({self.inter_node_beta} < {self.hw.beta})")
+        elif self.inter_node_beta is not None:
+            # the symmetric mistake: a cross-node β without a node size
+            # would silently reproduce flat-cluster results
+            raise ValueError(
+                "inter_node_beta without gpus_per_node does nothing — "
+                "set both (multi-node) or neither (flat)")
+        if self.contention_penalty < 0.0:
+            raise ValueError(
+                f"contention_penalty must be >= 0, got "
+                f"{self.contention_penalty}")
+
+    @property
+    def is_flat(self) -> bool:
+        """True when this is the paper's flat homogeneous cluster."""
+        return self.gpus_per_node is None and self.contention_penalty == 0.0
+
+    def spans_nodes(self, w) -> bool | np.ndarray:
+        """Whether a w-worker ring crosses node boundaries (scalar or
+        ndarray w)."""
+        if self.gpus_per_node is None:
+            return np.zeros_like(np.asarray(w), bool) if np.ndim(w) else False
+        return np.asarray(w) > self.gpus_per_node
+
+    def inter_hw(self) -> HardwareCoefficients:
+        """Coefficients a node-spanning ring sees: cross-node β."""
+        return dataclasses.replace(self.hw, beta=self.inter_node_beta,
+                                   name=f"{self.hw.name}+inter")
+
+    def contention_factor(self, n_comm: int) -> float:
+        """Speed multiplier for each of ``n_comm`` concurrent ring jobs."""
+        if n_comm <= 1 or self.contention_penalty == 0.0:
+            return 1.0
+        return 1.0 / (1.0 + self.contention_penalty * (n_comm - 1))
 
 
 def _log2(w):
@@ -72,7 +160,6 @@ def step_time(m, T_fwd, T_back, w, n, hw: HardwareCoefficients = TPU_V5E,
               algorithm: str | None = None) -> float:
     """Per-minibatch time with the algorithm Horovod would pick (§2.1)."""
     if algorithm is None:
-        from repro.collectives.schedules import best_algorithm
         algorithm = best_algorithm(w, n)
     fn = {"ring": t_ring, "doubling_halving": t_dh, "binary_blocks": t_bb}
     return fn[algorithm](m, T_fwd, T_back, w, n, hw)
@@ -106,8 +193,6 @@ def simulated_step_time(m, T_fwd, T_back, w, n,
     """First-principles variant: α/β/γ counters from executing the actual
     schedule (repro.collectives.schedules) instead of the closed forms.
     Used to cross-validate eqs. (2)-(4)."""
-    import numpy as np
-    from repro.collectives.schedules import ALGORITHMS, best_algorithm
     algorithm = algorithm or best_algorithm(w, n)
     # execute on a tiny vector; counters scale linearly in n
     probe = 64

@@ -1,0 +1,330 @@
+"""Parity oracle — the seed implementations, kept with the seed's cost
+profile.
+
+Everything in this module exists to *check* (and benchmark against) the
+fast paths, never to run them:
+
+  * ``doubling_heuristic_ref`` / ``optimus_greedy_ref`` / ``exact_dp_ref``
+    — the pre-table O(J)-rescan solvers over (job_id, Q, speed_fn)
+    callables.  The fast table/SoA solvers in ``repro.core.scheduler``
+    must stay allocation-for-allocation identical to these (asserted by
+    tests/test_scheduler_tables.py and ``bench_scheduler.py --check``).
+  * ``simulate_reference`` — the seed §7 event loop (O(J) candidate
+    rescans, scalar ``JobSpec.speed`` calls throughout, list pops for
+    arrivals).  ``simulate(..., engine="reference")`` dispatches here; the
+    SoA engine must produce bit-identical completion times, and the
+    benchmark's ≥20× speedup floor is measured against this loop.
+
+For the paper's own strategies (precompute / exploratory / fixed_k) the
+loop allocates through the ``*_ref`` solvers — the seed code path,
+verbatim.  Any *other* registered policy is adapted onto its own
+``allocate()`` over views built per solve, so the trajectory bookkeeping
+(event ordering, scalar progress arithmetic) is still independently
+exercised for new policies even though the allocator is shared.
+
+Cluster awareness mirrors the fast engine exactly: a non-flat topology
+swaps each job's scalar speed callable for a lookup into its
+cluster-scaled speed table, and the GADGET-style contention factor
+multiplies the speed of every concurrently-communicating (w >= 2) job.
+Flat homogeneous clusters skip both branches and run the seed arithmetic
+untouched.
+
+(The only change since the seed: ``doubling_heuristic_ref`` accepts
+per-job caps via ``_caps``, extended in lockstep with the fast solvers so
+parity stays meaningful on heterogeneous fleets.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+from repro.collectives.cost import ClusterModel
+from repro.core import scheduler as sched
+from repro.core.jobs import JobSpec
+from repro.core.scheduler import (Alloc, EXPLORE_SEGMENT, EXPLORE_WS,
+                                  JobTuple, RESCHEDULE_EVERY, _caps,
+                                  _gain_double)
+
+
+def doubling_heuristic_ref(jobs: Sequence[JobTuple], capacity: int,
+                           max_w=None) -> Alloc:
+    jobs = list(jobs)
+    caps = _caps(max_w, len(jobs))   # scalar or per-job, like the fast path
+    alloc: Alloc = {}
+    used = 0
+    # 1 worker to every job (FIFO when oversubscribed)
+    for (jid, _, _) in jobs:
+        if used < capacity:
+            alloc[jid] = 1
+            used += 1
+        else:
+            alloc[jid] = 0
+    # doubling by best average marginal gain
+    while True:
+        best, best_gain = None, 0.0
+        for idx, (jid, Q, f) in enumerate(jobs):
+            w = alloc[jid]
+            if w == 0:
+                continue
+            mw = caps[idx]
+            if mw is not None and 2 * w > mw:
+                continue
+            if used + w > capacity:   # doubling adds w more workers
+                continue
+            g = _gain_double(Q, f, w)
+            if g > best_gain:
+                best, best_gain = jid, g
+        if best is None:
+            return alloc
+        used += alloc[best]
+        alloc[best] *= 2
+
+
+def optimus_greedy_ref(jobs: Sequence[JobTuple], capacity: int,
+                       max_w: int | None = None) -> Alloc:
+    jobs = list(jobs)
+    alloc: Alloc = {}
+    used = 0
+    for (jid, _, _) in jobs:
+        if used < capacity:
+            alloc[jid] = 1
+            used += 1
+        else:
+            alloc[jid] = 0
+    while used < capacity:
+        best, best_gain = None, 0.0
+        for (jid, Q, f) in jobs:
+            w = alloc[jid]
+            if w == 0:
+                continue
+            if max_w is not None and w + 1 > max_w:
+                continue
+            g = Q / max(f(w), 1e-12) - Q / max(f(w + 1), 1e-12)
+            if g > best_gain:
+                best, best_gain = jid, g
+        if best is None:
+            return alloc
+        alloc[best] += 1
+        used += 1
+    return alloc
+
+
+def exact_dp_ref(jobs: Sequence[JobTuple], capacity: int,
+                 max_w: int | None = None,
+                 powers_of_two: bool = False) -> Alloc:
+    jobs = list(jobs)
+    J = len(jobs)
+    wmax = min(max_w or capacity, capacity)
+    choices = ([2 ** k for k in range(int(math.log2(wmax)) + 1)]
+               if powers_of_two else list(range(1, wmax + 1)))
+    assert J <= capacity, "exact_dp assumes every job can get >=1 worker (Z+)"
+    dp = {0: (0.0, ())}
+    for (jid, Q, f) in jobs:
+        ndp: dict[int, tuple[float, tuple]] = {}
+        for c, (cost, chosen) in dp.items():
+            for w in choices:
+                nc = c + w
+                if nc > capacity:
+                    continue
+                t = 0.0 if w == 0 else Q / max(f(w), 1e-12)
+                cand = (cost + t, chosen + (w,))
+                if nc not in ndp or cand[0] < ndp[nc][0]:
+                    ndp[nc] = cand
+        dp = ndp
+    best_cost, best_alloc = min(dp.values(), key=lambda kv: kv[0])
+    return {jid: w for (jid, _, _), w in zip(jobs, best_alloc)}
+
+
+# --------------------------------------------------------------------------
+# The seed §7 event loop.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Active:
+    spec: JobSpec
+    remaining: float              # epochs
+    w: int = 0
+    frozen_until: float = 0.0     # restart pause
+    explore_started: float | None = None
+    # scalar f(w): the job's own ``spec.speed`` on a flat cluster (the
+    # seed cost profile), a cluster-scaled table lookup on a topology
+    speed_fn: object = None
+
+    def __post_init__(self):
+        if self.speed_fn is None:
+            self.speed_fn = self.spec.speed
+
+    def explore_w(self, now: float) -> int | None:
+        """Worker count dictated by the explore phase, or None if done."""
+        if self.explore_started is None:
+            return None
+        seg = int((now - self.explore_started) // EXPLORE_SEGMENT)
+        if seg >= len(EXPLORE_WS):
+            return None
+        return EXPLORE_WS[seg]
+
+    def speed(self, now: float) -> float:
+        if now < self.frozen_until or self.w <= 0:
+            return 0.0
+        return self.speed_fn(self.w)
+
+
+def _explore_grants(active: list[_Active], capacity: int, now: float,
+                    alloc: dict[int, int], dynamic: list[_Active]) -> int:
+    """Grant explore-phase jobs their gang reservation; returns leftover cap.
+
+    Each profiling job reserves a gang of ``min(8, remaining capacity)``
+    GPUs (clamped — the old all-or-nothing 8 grant handed later explorers
+    exactly 0 and kept them out of the dynamic pool, silently starving
+    them) and runs its schedule-dictated w inside that reservation.
+    """
+    cap = capacity
+    for a in active:
+        ew = a.explore_w(now)
+        if ew is not None:
+            grant = min(8, cap)
+            alloc[a.spec.job_id] = min(ew, grant)
+            cap -= grant
+        else:
+            dynamic.append(a)
+    return cap
+
+
+def _view_of(active: list[_Active], cluster: ClusterModel) -> sched.AllocView:
+    """SoA views over an ``_Active`` list, built per solve (oracle only)."""
+    return sched.AllocView(
+        remaining=np.array([a.remaining for a in active]),
+        tables=np.stack([np.asarray(a.spec.speed_table(cluster))
+                         for a in active]),
+        max_w=np.array([a.spec.max_w for a in active], np.int64),
+        explore_started=np.array(
+            [-np.inf if a.explore_started is None else a.explore_started
+             for a in active]))
+
+
+def _allocate_seed(policy: sched.SchedulingPolicy, active: list[_Active],
+                   capacity: int, now: float) -> dict[int, int]:
+    """Seed allocation path for the paper's own strategies: callable-based
+    ``*_ref`` solvers, the original cost profile."""
+    if isinstance(policy, sched.FixedPolicy):
+        tuples = [(a.spec.job_id, a.remaining, a.speed_fn) for a in active]
+        return sched.fixed(tuples, capacity, policy.k)
+
+    alloc: dict[int, int] = {}
+    dynamic: list[_Active] = []
+    if isinstance(policy, sched.ExploratoryPolicy):
+        cap = _explore_grants(active, capacity, now, alloc, dynamic)
+    else:  # precompute: all jobs schedulable immediately
+        cap = capacity
+        dynamic = list(active)
+    tuples = [(a.spec.job_id, a.remaining, a.speed_fn) for a in dynamic]
+    alloc.update(doubling_heuristic_ref(
+        tuples, cap, max_w=[a.spec.max_w for a in dynamic]))
+    return alloc
+
+
+_SEED_POLICIES = (sched.DoublingPolicy, sched.ExploratoryPolicy,
+                  sched.FixedPolicy)
+
+
+def simulate_reference(jobs: list[JobSpec], cluster: ClusterModel,
+                       policy: sched.SchedulingPolicy):
+    """The pre-table event loop — the trajectory oracle.
+
+    Must stay behaviorally identical to the SoA engine
+    (``simulator._simulate_table``), asserted by tests and
+    benchmarks/bench_scheduler.py.
+    """
+    from repro.core.simulator import SimResult
+
+    capacity = cluster.capacity
+    penalty = cluster.contention_penalty
+    flat_fabric = cluster.gpus_per_node is None
+    pending = sorted(jobs, key=lambda j: j.arrival)
+    active: list[_Active] = []
+    done: dict[int, float] = {}
+    arrivals = {j.job_id: j.arrival for j in jobs}
+    now = 0.0
+    peak = 0
+    next_resched = 0.0
+    seed_policy = isinstance(policy, _SEED_POLICIES)
+
+    def apply_alloc(now: float):
+        if seed_policy:
+            target = _allocate_seed(policy, active, capacity, now)
+        else:
+            soa = policy.allocate(_view_of(active, cluster), cluster, now)
+            target = {a.spec.job_id: int(w) for a, w in zip(active, soa)}
+        for a in active:
+            w_new = target.get(a.spec.job_id, 0)
+            if w_new != a.w:
+                a.w = w_new
+                if w_new > 0:
+                    a.frozen_until = now + cluster.restart_cost
+        # also freeze explore-phase jobs at segment switches implicitly via
+        # reschedule events (RESCHEDULE_EVERY == EXPLORE_SEGMENT).
+
+    while pending or active:
+        # --- next event time -------------------------------------------
+        # next_resched is always a candidate, so the list is never empty
+        fac = 1.0
+        if penalty:
+            fac = cluster.contention_factor(
+                sum(1 for a in active if a.w >= 2))
+        t_candidates = [next_resched]
+        if pending:
+            t_candidates.append(pending[0].arrival)
+        for a in active:
+            s = a.speed(now)
+            if s > 0:
+                if fac != 1.0 and a.w >= 2:
+                    s *= fac
+                t_candidates.append(max(now, a.frozen_until)
+                                    + a.remaining / s)
+            elif a.w > 0 and a.frozen_until > now:
+                t_candidates.append(a.frozen_until)
+        t_next = max(now, min(t_candidates))
+
+        # --- advance progress -------------------------------------------
+        for a in active:
+            run_from = max(now, a.frozen_until)
+            dt = max(0.0, t_next - run_from)
+            s = a.speed_fn(a.w) if a.w > 0 else 0.0
+            if fac != 1.0 and a.w >= 2:
+                s *= fac
+            a.remaining -= dt * s
+
+        now = t_next
+
+        # --- completions -------------------------------------------------
+        finished = [a for a in active if a.remaining <= 1e-9]
+        for a in finished:
+            done[a.spec.job_id] = now
+            active.remove(a)
+
+        # --- arrivals ----------------------------------------------------
+        arrived = False
+        while pending and pending[0].arrival <= now + 1e-9:
+            j = pending.pop(0)
+            a = _Active(spec=j, remaining=j.epochs)
+            if not flat_fabric:
+                table = j.speed_table(cluster)
+                a.speed_fn = lambda w, t=table: float(t[w])
+            if policy.explores:
+                a.explore_started = now
+            active.append(a)
+            arrived = True
+
+        peak = max(peak, len(active))
+
+        # --- reallocation ------------------------------------------------
+        if arrived or finished or now + 1e-9 >= next_resched:
+            if active:
+                apply_alloc(now)
+            next_resched = now + RESCHEDULE_EVERY
+
+    return SimResult(strategy=policy.spec, completion_times=done,
+                     arrival_times=arrivals, peak_concurrency=peak)

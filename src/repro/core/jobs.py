@@ -64,23 +64,62 @@ class JobSpec:
         s = self.speed(w)
         return math.inf if s <= 0 else epochs / s
 
-    def speed_table(self, max_w: int | None = None) -> np.ndarray:
-        """Cached ``speed[w]`` for w = 0..max_w (index 0 is 0.0).
+    def speed_table(self,
+                    cluster: "cost_lib.ClusterModel | int | None" = None
+                    ) -> np.ndarray:
+        """Cached ``speed[w]`` for w = 0..max index (index 0 is 0.0).
 
-        Bit-identical to ``[self.speed(w) for w in range(max_w + 1)]`` but
-        built with one vectorized pass instead of one feature-matrix
-        construction per call — this is the fix for the seed profile where
-        169k scalar ``speed`` calls burned >90% of simulation wall time.
-        The returned array is cached and read-only; don't mutate JobSpec
-        fields after the first call.
+        ``cluster`` is either a :class:`ClusterModel` (max index =
+        ``cluster.capacity``, with the cross-node β penalty applied to
+        every node-spanning w — see ``_cluster_speed_table``), a plain int
+        max index (the flat homogeneous table, exactly the paper's model),
+        or ``None`` for ``self.max_w``.  A flat ClusterModel delegates to
+        the int path, so it is bit-identical to the integer form by
+        construction.
+
+        The int path is bit-identical to ``[self.speed(w) for w in
+        range(max_w + 1)]`` but built with one vectorized pass instead of
+        one feature-matrix construction per call — the fix for the seed
+        profile where 169k scalar ``speed`` calls burned >90% of
+        simulation wall time.  Returned arrays are cached and read-only;
+        don't mutate JobSpec fields after the first call.
         """
-        max_w = self.max_w if max_w is None else int(max_w)
+        if isinstance(cluster, cost_lib.ClusterModel):
+            if cluster.gpus_per_node is None:
+                return self.speed_table(cluster.capacity)
+            return self._cluster_speed_table(cluster)
+        max_w = self.max_w if cluster is None else int(cluster)
         cache = self.__dict__.setdefault("_speed_tables", {})
         tab = cache.get(max_w)
         if tab is None:
             tab = self._build_speed_table(max_w)
             tab.flags.writeable = False
             cache[max_w] = tab
+        return tab
+
+    def _cluster_speed_table(self, cluster) -> np.ndarray:
+        """Topology-aware speed table: flat base speeds, with rows whose
+        ring spans nodes (w > gpus_per_node) scaled by the analytic
+        intra/inter step-time ratio (same m/T_fwd/T_back/n_bytes, β
+        swapped for ``cluster.inter_node_beta``).  Cached per cluster —
+        ClusterModel is frozen/hashable."""
+        cache = self.__dict__.setdefault("_speed_tables", {})
+        tab = cache.get(cluster)
+        if tab is None:
+            tab = self.speed_table(cluster.capacity).copy()
+            ws = np.arange(len(tab), dtype=float)
+            span = np.asarray(cluster.spans_nodes(np.arange(len(tab))))
+            span[0] = False
+            if span.any():
+                t_intra = cost_lib.step_time_table(
+                    self.m, self.T_fwd, self.T_back, ws[span], self.n_bytes,
+                    cluster.hw)
+                t_inter = cost_lib.step_time_table(
+                    self.m, self.T_fwd, self.T_back, ws[span], self.n_bytes,
+                    cluster.inter_hw())
+                tab[span] *= t_intra / t_inter
+            tab.flags.writeable = False
+            cache[cluster] = tab
         return tab
 
     def _build_speed_table(self, max_w: int) -> np.ndarray:

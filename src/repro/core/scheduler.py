@@ -1,4 +1,4 @@
-"""Resource allocation — paper §4.
+"""Resource allocation — paper §4 — and the scheduling-policy registry.
 
 The problem (§4.1):   min Σ_j t_j,  t_j = Q_j / f_j(w_j),
                       Σ_j w_j <= C,  w_j in Z+           (NP-hard, non-convex)
@@ -13,7 +13,7 @@ Solvers:
   * ``exact_dp``            — exact DP over worker counts (validation).
   * ``fixed``               — every job requests a constant w (§7 baselines).
 
-Three API layers, one semantics:
+Solver API layers, one semantics:
 
   * *SoA* (``doubling_heuristic_soa`` / ``fixed_soa``) take the simulator's
     structure-of-arrays state directly — a remaining-work ndarray plus a 2-D
@@ -23,29 +23,42 @@ Three API layers, one semantics:
     max-heap as the table layer.
   * *Table-driven* (``doubling_heuristic_table`` & friends) take jobs as
     (job_id, Q, speed_table) where ``speed_table[w]`` is f(w) for
-    w = 0..max index.  These are the hot path: gains come from O(1) array
-    lookups, and the doubling/greedy loops pop a lazy max-heap instead of
-    rescanning all J jobs per step.  A job's marginal gain depends only on
-    its own (Q, w), so heap entries never need recomputation: an entry is
-    pushed when the job reaches w and is simply discarded as stale if the
-    job's allocation has moved on by the time it is popped.
+    w = 0..max index.  Gains come from O(1) array lookups, and the
+    doubling/greedy loops pop a lazy max-heap instead of rescanning all J
+    jobs per step.  A job's marginal gain depends only on its own (Q, w),
+    so heap entries never need recomputation: an entry is pushed when the
+    job reaches w and is simply discarded as stale if the job's allocation
+    has moved on by the time it is popped.
   * *Callable-based* (``doubling_heuristic`` & friends) keep the original
     (job_id, Q, speed_fn) signature as thin adapters: they sample the
     callable once into a table and delegate.  Allocation-for-allocation
-    identical to the pre-table implementations (the ``*_ref`` versions
-    kept below for parity tests and benchmarks).
+    identical to the pre-table implementations (the ``*_ref`` seed
+    versions now live in ``repro.core._reference``, used only by parity
+    tests and ``benchmarks/bench_scheduler.py``).
 
 Tie-breaking matches the original scan exactly: among equal best gains the
 job earliest in the input sequence wins, which the heap encodes by ordering
 entries (-gain, input_index).
+
+On top of the solvers sits the **policy registry** (bottom of this
+module): every cluster strategy — the paper's ``precompute`` /
+``exploratory`` / ``fixed_k`` plus SRTF and the GADGET-style utility
+greedy — is a :class:`SchedulingPolicy` with one
+``allocate(state, cluster, now)`` entry point over the SoA views
+(:class:`AllocView`).  Both simulator engines, the benchmarks and the
+tests construct policies exclusively through :func:`get_policy`, so a new
+strategy is one registered class — not three parallel solver stacks.
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
 import math
 from typing import Callable, Sequence
 
 import numpy as np
+
+from repro.collectives.cost import ClusterModel
 
 Alloc = dict[int, int]
 JobTuple = tuple[int, float, Callable[[int], float]]  # (id, Q, speed_fn)
@@ -334,98 +347,321 @@ def total_time(jobs: Sequence[JobTuple], alloc: Alloc) -> float:
 
 
 # --------------------------------------------------------------------------
-# Reference implementations — the pre-table O(J)-rescan solvers, kept with
-# the seed's cost profile for allocation-parity tests and as the "seed"
-# side of benchmarks/bench_scheduler.py speedup measurements.  (The only
-# change since the seed: ``doubling_heuristic_ref`` accepts per-job caps
-# via ``_caps``, extended in lockstep with the fast solvers so parity
-# stays meaningful on heterogeneous fleets.)
+# Scheduling-policy registry.
+#
+# A policy is the cluster-level strategy Table 3 sweeps: given the active
+# set (as SoA views — the representation both simulator engines share) and
+# the ClusterModel, produce a worker-count target per job.  Policies are
+# constructed exclusively through ``get_policy("spec")`` so every consumer
+# (simulator engines, run_table3, benchmarks, tests) resolves strategy
+# strings in exactly one place, with validation instead of str.split
+# crashes deep in the event loop.
 # --------------------------------------------------------------------------
 
-def doubling_heuristic_ref(jobs: Sequence[JobTuple], capacity: int,
-                           max_w=None) -> Alloc:
-    jobs = list(jobs)
-    caps = _caps(max_w, len(jobs))   # scalar or per-job, like the fast path
-    alloc: Alloc = {}
-    used = 0
-    # 1 worker to every job (FIFO when oversubscribed)
-    for (jid, _, _) in jobs:
-        if used < capacity:
-            alloc[jid] = 1
-            used += 1
-        else:
-            alloc[jid] = 0
-    # doubling by best average marginal gain
-    while True:
-        best, best_gain = None, 0.0
-        for idx, (jid, Q, f) in enumerate(jobs):
-            w = alloc[jid]
-            if w == 0:
-                continue
-            mw = caps[idx]
-            if mw is not None and 2 * w > mw:
-                continue
-            if used + w > capacity:   # doubling adds w more workers
-                continue
-            g = _gain_double(Q, f, w)
-            if g > best_gain:
-                best, best_gain = jid, g
-        if best is None:
-            return alloc
-        used += alloc[best]
-        alloc[best] *= 2
+# §7 simulation constants the exploratory policy and both engines share.
+EXPLORE_SEGMENT = 150.0      # 2.5 minutes at each of 1, 2, 4, 8 (§7)
+EXPLORE_WS = (1, 2, 4, 8)
+RESCHEDULE_EVERY = 150.0     # == EXPLORE_SEGMENT (segment switches land
+                             # exactly on reschedule ticks — load-bearing)
 
 
-def optimus_greedy_ref(jobs: Sequence[JobTuple], capacity: int,
-                       max_w: int | None = None) -> Alloc:
-    jobs = list(jobs)
-    alloc: Alloc = {}
-    used = 0
-    for (jid, _, _) in jobs:
-        if used < capacity:
-            alloc[jid] = 1
-            used += 1
-        else:
-            alloc[jid] = 0
-    while used < capacity:
-        best, best_gain = None, 0.0
-        for (jid, Q, f) in jobs:
-            w = alloc[jid]
-            if w == 0:
-                continue
-            if max_w is not None and w + 1 > max_w:
-                continue
-            g = Q / max(f(w), 1e-12) - Q / max(f(w + 1), 1e-12)
-            if g > best_gain:
-                best, best_gain = jid, g
-        if best is None:
-            return alloc
-        alloc[best] += 1
-        used += 1
-    return alloc
+@dataclasses.dataclass
+class AllocView:
+    """Structure-of-arrays view of the active set, in reference-list order
+    (arrival order with in-place removals — the order is load-bearing for
+    solver tie-breaks, FIFO fixed grants and explore-gang grants).
+
+    ``tables`` may be wider than the active set (the simulator's
+    preallocated matrix); row ``rows[i]`` — or row i when ``rows`` is
+    None — is job i's speed table.
+    """
+    remaining: np.ndarray                # (n,) remaining work (epochs)
+    tables: np.ndarray                   # 2-D speed-table matrix
+    max_w: np.ndarray                    # (n,) per-job scale-out caps
+    explore_started: np.ndarray          # (n,) explore-phase start, -inf
+                                         # when the job never profiles
+    rows: np.ndarray | None = None       # job i's row in `tables`
+
+    @property
+    def n(self) -> int:
+        return len(self.remaining)
+
+    def row_of(self, i: int) -> np.ndarray:
+        return self.tables[i if self.rows is None else self.rows[i]]
 
 
-def exact_dp_ref(jobs: Sequence[JobTuple], capacity: int,
-                 max_w: int | None = None,
-                 powers_of_two: bool = False) -> Alloc:
-    jobs = list(jobs)
-    J = len(jobs)
-    wmax = min(max_w or capacity, capacity)
-    choices = ([2 ** k for k in range(int(math.log2(wmax)) + 1)]
-               if powers_of_two else list(range(1, wmax + 1)))
-    assert J <= capacity, "exact_dp assumes every job can get >=1 worker (Z+)"
-    dp = {0: (0.0, ())}
-    for (jid, Q, f) in jobs:
-        ndp: dict[int, tuple[float, tuple]] = {}
-        for c, (cost, chosen) in dp.items():
-            for w in choices:
-                nc = c + w
-                if nc > capacity:
-                    continue
-                t = 0.0 if w == 0 else Q / max(f(w), 1e-12)
-                cand = (cost + t, chosen + (w,))
-                if nc not in ndp or cand[0] < ndp[nc][0]:
-                    ndp[nc] = cand
-        dp = ndp
-    best_cost, best_alloc = min(dp.values(), key=lambda kv: kv[0])
-    return {jid: w for (jid, _, _), w in zip(jobs, best_alloc)}
+class SchedulingPolicy:
+    """One cluster scheduling strategy.
+
+    Subclasses set ``spec`` (the canonical string, e.g. ``"fixed_8"``) and
+    implement :meth:`allocate`.  ``static`` declares that the target
+    depends only on the active set's identity/order (not on remaining
+    work), which lets the fast engine reuse a solve across pure reschedule
+    ticks; ``explores`` makes the simulator stamp newly admitted jobs with
+    an explore-phase start time.
+    """
+
+    spec: str = "?"
+    static: bool = False
+    explores: bool = False
+
+    def allocate(self, state: AllocView, cluster: ClusterModel,
+                 now: float) -> np.ndarray:
+        """Return int64 worker counts aligned with ``state`` order."""
+        raise NotImplementedError
+
+    def validate(self, cluster: ClusterModel) -> None:
+        """Reject cluster/policy combinations that can never make progress
+        (called once by ``simulate`` before the event loop starts)."""
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}({self.spec!r})"
+
+
+@dataclasses.dataclass(frozen=True)
+class _PolicyEntry:
+    factory: Callable[[str | None], SchedulingPolicy]
+    example: str            # a runnable spec, e.g. "fixed_8" for "fixed"
+
+
+_POLICY_REGISTRY: dict[str, _PolicyEntry] = {}
+
+
+def register_policy(name: str,
+                    factory: Callable[[str | None], SchedulingPolicy],
+                    example: str | None = None) -> None:
+    """Register a policy under ``name``.
+
+    ``factory(param)`` receives the parameter suffix of the spec string
+    (``"8"`` for ``"fixed_8"``, None for a bare name) and must validate
+    it.  ``example`` is a runnable spec for registry-wide parity gates
+    (defaults to ``name`` — required for parameterized policies whose
+    bare name is not runnable).
+    """
+    if name in _POLICY_REGISTRY:
+        raise ValueError(f"policy {name!r} already registered")
+    _POLICY_REGISTRY[name] = _PolicyEntry(factory, example or name)
+
+
+def registered_policies() -> dict[str, str]:
+    """``{name: runnable example spec}`` for every registered policy —
+    the iteration surface for the CI parity gate and the docs."""
+    return {n: e.example for n, e in sorted(_POLICY_REGISTRY.items())}
+
+
+def get_policy(spec: str | SchedulingPolicy) -> SchedulingPolicy:
+    """Resolve a strategy spec string into a policy instance.
+
+    Exact registry names win (``"utility_greedy"``); otherwise the part
+    after the last underscore is the policy parameter (``"fixed_8"`` ->
+    ``fixed`` with k=8).  Malformed specs fail here, loudly, instead of
+    dying inside ``str.split``/``int()`` deep in the engine.
+    """
+    if isinstance(spec, SchedulingPolicy):
+        return spec
+    if not isinstance(spec, str) or not spec:
+        raise ValueError(f"policy spec must be a non-empty string, "
+                         f"got {spec!r}")
+    base, param = spec, None
+    if base not in _POLICY_REGISTRY and "_" in base:
+        base, param = spec.rsplit("_", 1)
+    entry = _POLICY_REGISTRY.get(base)
+    if entry is None:
+        raise ValueError(
+            f"unknown scheduling policy {spec!r}; registered: "
+            f"{', '.join(sorted(_POLICY_REGISTRY))}")
+    return entry.factory(param)
+
+
+def _no_param(name: str, param: str | None) -> None:
+    if param is not None:
+        raise ValueError(f"policy {name!r} takes no parameter, "
+                         f"got {name}_{param}")
+
+
+def _int_param(name: str, param: str | None, example: str) -> int:
+    if param is None:
+        raise ValueError(f"policy {name!r} needs an integer parameter, "
+                         f"e.g. {example!r}")
+    try:
+        value = int(param)
+    except ValueError:
+        raise ValueError(f"policy parameter must be an integer, got "
+                         f"{name}_{param}") from None
+    if value < 1:
+        raise ValueError(f"policy parameter must be >= 1, got {name}_{param}")
+    return value
+
+
+class DoublingPolicy(SchedulingPolicy):
+    """``precompute`` (§7): resource models known up front, the §4.2
+    doubling heuristic over the whole active set at every reallocation."""
+
+    spec = "precompute"
+
+    def allocate(self, state, cluster, now):
+        return doubling_heuristic_soa(state.remaining, state.tables,
+                                      cluster.capacity, max_w=state.max_w,
+                                      rows=state.rows)
+
+
+class ExploratoryPolicy(SchedulingPolicy):
+    """``exploratory`` (§7): a new job spends 2.5 min at each of
+    w = 1, 2, 4, 8 to collect the (w, f(w)) points eq. 5 needs, inside a
+    gang reservation of min(8, remaining capacity); everyone else shares
+    what is left through the doubling heuristic."""
+
+    spec = "exploratory"
+    explores = True
+
+    def allocate(self, state, cluster, now):
+        n = state.n
+        cap = cluster.capacity
+        target = np.zeros(n, np.int64)
+        # -inf marks never-profiling jobs; keep them out of the floor
+        # divide (inf // x is nan + a RuntimeWarning)
+        profiling = np.isfinite(state.explore_started)
+        seg = np.full(n, np.inf)
+        if profiling.any():
+            seg[profiling] = ((now - state.explore_started[profiling])
+                              // EXPLORE_SEGMENT)
+        explorer = seg < len(EXPLORE_WS)
+        for i in np.nonzero(explorer)[0]:
+            grant = min(8, cap)
+            target[i] = min(EXPLORE_WS[int(seg[i])], grant)
+            cap -= grant
+        assert cap >= 0, "explore gang grants exceeded cluster capacity"
+        dyn = np.nonzero(~explorer)[0]
+        rows = dyn if state.rows is None else state.rows[dyn]
+        target[dyn] = doubling_heuristic_soa(
+            state.remaining[dyn], state.tables, cap,
+            max_w=state.max_w[dyn], rows=rows)
+        return target
+
+
+class FixedPolicy(SchedulingPolicy):
+    """``fixed_k`` (§7 baselines): every job requests a constant gang of
+    k workers, granted all-or-nothing FIFO while capacity lasts."""
+
+    static = True
+
+    def __init__(self, k: int):
+        self.k = k
+        self.spec = f"fixed_{k}"
+
+    def allocate(self, state, cluster, now):
+        return fixed_soa(state.n, cluster.capacity, self.k)
+
+    def validate(self, cluster):
+        if self.k > cluster.capacity:
+            raise ValueError(
+                f"{self.spec!r} can never run a job on a "
+                f"{cluster.capacity}-GPU cluster (gang size must be in "
+                f"[1, capacity])")
+
+
+class SRTFPolicy(SchedulingPolicy):
+    """Shortest-remaining-time-first: jobs ranked by their best-case
+    remaining service time (Q / max_w f(w)); each, in that order, gets its
+    speed-maximizing feasible worker count until capacity runs out.
+
+    The classic size-based discipline the doubling heuristic implicitly
+    approximates under contention — here as an explicit policy so the two
+    can be compared head-to-head on heavy-tailed workloads.
+    """
+
+    spec = "srtf"
+
+    def allocate(self, state, cluster, now):
+        n = state.n
+        cap = cluster.capacity
+        target = np.zeros(n, np.int64)
+        W = state.tables.shape[1] - 1
+        # ranking pass, vectorized (this policy is non-static, so allocate
+        # re-runs at every event — a per-job Python loop here would be the
+        # slowest path in the engine on 1000-job traces)
+        rows = np.arange(n) if state.rows is None else state.rows
+        tabs = state.tables[rows]
+        feasible = (np.arange(1, W + 1)[None, :]
+                    <= np.minimum(state.max_w, W)[:, None])
+        f_best = np.where(feasible, tabs[:, 1:], 0.0).max(axis=1)
+        t_best = state.remaining / np.maximum(f_best, 1e-12)
+        # stable sort: FIFO order breaks remaining-time ties
+        for i in np.argsort(t_best, kind="stable"):
+            if cap <= 0:
+                break
+            table = state.row_of(i)
+            hi = min(int(state.max_w[i]), cap, W)
+            if hi < 1:
+                continue
+            w = int(np.argmax(table[1:hi + 1])) + 1
+            target[i] = w
+            cap -= w
+        return target
+
+
+class UtilityGreedyPolicy(SchedulingPolicy):
+    """GADGET-style utility greedy (arXiv 2202.01158): grow the job whose
+    next ring-doubling adds the most cluster *throughput* per GPU.
+
+    Start everyone at w=1 (FIFO), then repeatedly double the job with the
+    best marginal utility (f(2w) - f(w)) / w.  Unlike the paper's
+    ``precompute`` gain (eq. 6), the utility is Q-independent — the policy
+    maximizes aggregate epochs/sec rather than total completion time, so
+    it is blind to job sizes (and ``static``: a pure reschedule tick with
+    an unchanged active set reuses the previous solve).
+    """
+
+    spec = "utility_greedy"
+    static = True
+
+    def allocate(self, state, cluster, now):
+        n = state.n
+        capacity = cluster.capacity
+        caps = state.max_w.tolist()
+        out = [0] * n
+        n1 = min(n, capacity)
+        out[:n1] = [1] * n1
+        used = n1
+        W = state.tables.shape[1] - 1
+        heap: list[tuple[float, int, int]] = []
+        for i in range(n1):
+            if 2 <= min(caps[i], W):
+                table = state.row_of(i)
+                g = float(table[2]) - float(table[1])
+                if g > 0.0:
+                    heap.append((-g, i, 1))
+        heapq.heapify(heap)
+        while heap:
+            neg_g, idx, w = heapq.heappop(heap)
+            if out[idx] != w:
+                continue                  # stale: job already doubled past w
+            if used + w > capacity:
+                continue                  # never feasible again -> discard
+            used += w
+            w2 = 2 * w
+            out[idx] = w2
+            if 2 * w2 <= min(caps[idx], W) and used + w2 <= capacity:
+                table = state.row_of(idx)
+                g = (float(table[2 * w2]) - float(table[w2])) / w2
+                if g > 0.0:
+                    heapq.heappush(heap, (-g, idx, w2))
+        return np.asarray(out, dtype=np.int64)
+
+
+def _parameterless(name: str, cls: type[SchedulingPolicy]):
+    def factory(param: str | None) -> SchedulingPolicy:
+        _no_param(name, param)
+        return cls()
+    return factory
+
+
+register_policy("precompute", _parameterless("precompute", DoublingPolicy))
+register_policy("exploratory",
+                _parameterless("exploratory", ExploratoryPolicy))
+register_policy("fixed",
+                lambda p: FixedPolicy(_int_param("fixed", p, "fixed_8")),
+                example="fixed_8")
+register_policy("srtf", _parameterless("srtf", SRTFPolicy))
+register_policy("utility_greedy",
+                _parameterless("utility_greedy", UtilityGreedyPolicy))

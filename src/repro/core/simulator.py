@@ -1,12 +1,20 @@
 """Cluster scheduler simulation — paper §7.
 
 Event-driven simulation of a C-GPU cluster with Poisson job arrivals.
-Strategies (Table 3): ``precompute``, ``exploratory``, and fixed 1/2/4/8.
-Reallocation happens at arrivals, completions and periodic intervals; every
-allocation change costs the measured checkpoint-stop-restart pause (~10 s,
-§6).  The exploratory strategy gives a new job 8 GPUs for its first ten
-minutes, running 2.5 min at each of 1, 2, 4, 8 GPUs to collect the (w, f(w))
-points the resource model (eq. 5) needs.
+Strategies are :class:`repro.core.scheduler.SchedulingPolicy` instances
+resolved through the policy registry (``scheduler.get_policy``): the
+paper's Table-3 set (``precompute``, ``exploratory``, ``fixed_k``) plus
+any registered extension (``srtf``, ``utility_greedy``, ...).
+Reallocation happens at arrivals, completions and periodic intervals;
+every allocation change costs the measured checkpoint-stop-restart pause
+(``cluster.restart_cost``, ~10 s, §6).
+
+The cluster itself is a :class:`repro.collectives.cost.ClusterModel`:
+capacity, hardware coefficients, an optional node topology (jobs whose
+ring spans nodes run on cluster-scaled speed tables) and a GADGET-style
+contention penalty (concurrent w>=2 jobs share links and slow each other
+down).  A flat homogeneous ClusterModel — the default built from a bare
+``capacity`` int — reproduces the paper's setup bit-identically.
 
 Two engines, one trajectory:
 
@@ -18,25 +26,27 @@ Two engines, one trajectory:
     (doubling growth) and compact in place on completion, never rebuilt per
     tick.  Each job's speed curve is sampled once into a table row at
     admission (``JobSpec.speed_table`` is bit-identical to per-scalar
-    ``speed`` calls), allocation is solved by the SoA lazy-heap solvers
-    (``scheduler.doubling_heuristic_soa`` — no per-job tuples), the
-    per-event completion-estimate scan and progress advance are vectorized
-    slices, deterministic events (reschedule ticks, restart-freeze
-    expiries) live in a heapq with lazy invalidation, and the next arrival
-    is an index into the time-sorted job list.  This is what makes
-    1000-job traces finish in well under a second per strategy.
+    ``speed`` calls), allocation is one ``policy.allocate`` call over the
+    SoA views (:class:`scheduler.AllocView`), the per-event
+    completion-estimate scan and progress advance are vectorized slices,
+    deterministic events (reschedule ticks, restart-freeze expiries) live
+    in a heapq with lazy invalidation, and the next arrival is an index
+    into the time-sorted job list.  This is what makes 1000-job traces
+    finish in well under a second per strategy.
     Completion estimates are deliberately *recomputed* each event: the
     trajectory ``remaining -= dt * speed`` re-derives the completion time
     from the current (now, remaining) pair at every event, so a cached
     completion event would drift from the reference by one ulp per tick —
     recomputation is what keeps the two engines bit-identical.  Pure
-    reschedule ticks skip re-solving only for ``fixed_k`` strategies, where
-    the target provably depends on nothing but the active-set order; the
-    dynamic strategies re-solve every tick because the doubling gains move
-    with ``remaining`` (on the Table-3 workloads ~20% of same-active-set
+    reschedule ticks skip re-solving only for policies that declare
+    ``static = True`` (``fixed_k``, ``utility_greedy``), whose target
+    provably depends on nothing but the active-set identity/order; the
+    others re-solve every tick because their targets move with
+    ``remaining`` (on the Table-3 workloads ~20% of same-active-set
     re-solves change the target, so skipping them would change results).
-  * ``engine="reference"`` — the original O(J)-rescan loop kept verbatim as
-    the parity oracle and the "seed" side of benchmarks/bench_scheduler.py.
+  * ``engine="reference"`` — the seed O(J)-rescan loop, preserved with the
+    seed's cost profile in ``repro.core._reference`` as the parity oracle
+    and the "seed" side of benchmarks/bench_scheduler.py.
 
 Both engines share the exploratory-phase gang-grant clamp (a job entering
 its explore phase reserves ``min(8, remaining capacity)`` instead of the
@@ -49,40 +59,19 @@ import heapq
 
 import numpy as np
 
-from repro.core import scheduler as sched
+from repro.collectives.cost import ClusterModel
+from repro.core import _reference, scheduler as sched
 from repro.core.jobs import JobSpec
+# Shared §6/§7 constants (the explore schedule is policy-owned now);
+# re-exported here because callers historically read them off this module.
+from repro.core.scheduler import (EXPLORE_SEGMENT, EXPLORE_WS,  # noqa: F401
+                                  RESCHEDULE_EVERY)
+from repro.core._reference import _Active  # noqa: F401  (compat re-export)
 
-RESTART_COST = 10.0          # seconds (paper §6)
-EXPLORE_SEGMENT = 150.0      # 2.5 minutes at each of 1, 2, 4, 8 (§7)
-EXPLORE_WS = (1, 2, 4, 8)
-RESCHEDULE_EVERY = 150.0
-
-
-@dataclasses.dataclass
-class _Active:
-    spec: JobSpec
-    remaining: float              # epochs
-    w: int = 0
-    frozen_until: float = 0.0     # restart pause
-    explore_started: float | None = None
-    # speed table sampled once at admission; only the _allocate_table
-    # parity oracle reads it now — the fast engine keeps tables in
-    # _SoAState.tables instead
-    table: list | None = None
-
-    def explore_w(self, now: float) -> int | None:
-        """Worker count dictated by the explore phase, or None if done."""
-        if self.explore_started is None:
-            return None
-        seg = int((now - self.explore_started) // EXPLORE_SEGMENT)
-        if seg >= len(EXPLORE_WS):
-            return None
-        return EXPLORE_WS[seg]
-
-    def speed(self, now: float) -> float:
-        if now < self.frozen_until or self.w <= 0:
-            return 0.0
-        return self.spec.speed(self.w)
+# The restart pause (paper §6, ~10 s) is configured per cluster:
+# ``ClusterModel(restart_cost=...)``.  There is deliberately no module
+# constant — a module-level knob would silently no-op now that both
+# engines read ``cluster.restart_cost``.
 
 
 @dataclasses.dataclass
@@ -99,93 +88,54 @@ class SimResult:
         return float(np.mean(jcts)) / 3600.0
 
 
-def _explore_grants(active: list[_Active], capacity: int, now: float,
-                    alloc: dict[int, int], dynamic: list[_Active]) -> int:
-    """Grant explore-phase jobs their gang reservation; returns leftover cap.
-
-    Each profiling job reserves a gang of ``min(8, remaining capacity)``
-    GPUs (clamped — the old all-or-nothing 8 grant handed later explorers
-    exactly 0 and kept them out of the dynamic pool, silently starving
-    them) and runs its schedule-dictated w inside that reservation.
-    """
-    cap = capacity
-    for a in active:
-        ew = a.explore_w(now)
-        if ew is not None:
-            grant = min(8, cap)
-            alloc[a.spec.job_id] = min(ew, grant)
-            cap -= grant
-        else:
-            dynamic.append(a)
-    return cap
-
-
 def _allocate(strategy: str, active: list[_Active], capacity: int,
               now: float) -> dict[int, int]:
-    """Target allocation for the current set of active jobs (callable path,
-    reference engine)."""
-    if strategy.startswith("fixed"):
-        k = int(strategy.split("_")[1])
-        tuples = [(a.spec.job_id, a.remaining, a.spec.speed) for a in active]
-        return sched.fixed(tuples, capacity, k)
-
-    alloc: dict[int, int] = {}
-    dynamic: list[_Active] = []
-    if strategy == "exploratory":
-        cap = _explore_grants(active, capacity, now, alloc, dynamic)
-    else:  # precompute: all jobs schedulable immediately
-        cap = capacity
-        dynamic = list(active)
-    tuples = [(a.spec.job_id, a.remaining, a.spec.speed) for a in dynamic]
-    alloc.update(sched.doubling_heuristic_ref(
-        tuples, cap, max_w=[a.spec.max_w for a in dynamic]))
-    return alloc
+    """Target allocation for an ``_Active`` list — a thin adapter over the
+    policy registry, kept for tests and ad-hoc callers that hold per-job
+    objects instead of SoA state.  Builds the views once and delegates to
+    ``policy.allocate``."""
+    cluster = ClusterModel(capacity=capacity)
+    policy = sched.get_policy(strategy)
+    target = policy.allocate(_reference._view_of(active, cluster), cluster,
+                             now)
+    return {a.spec.job_id: int(w) for a, w in zip(active, target)}
 
 
-def _allocate_table(strategy: str, active: list[_Active], capacity: int,
-                    now: float) -> dict[int, int]:
-    """Target allocation from cached speed tables over ``_Active`` lists.
+# The table-path adapter collapsed into the same registry call (the
+# per-job cached table rows it used to read are superseded by the
+# cluster-keyed ``JobSpec.speed_table`` cache the views are built from).
+_allocate_table = _allocate
 
-    No longer on the hot path (the fast engine allocates through
-    ``_allocate_soa``); kept as a second parity oracle between the tuple
-    and SoA layers, exercised by the explore-grant tests.
+
+def simulate(jobs: list[JobSpec], capacity: int | None = None,
+             strategy: str | sched.SchedulingPolicy = "precompute",
+             engine: str = "table",
+             cluster: ClusterModel | None = None) -> SimResult:
+    """Simulate ``jobs`` on a cluster under a scheduling policy.
+
+    ``strategy`` is a registry spec string (``"precompute"``,
+    ``"fixed_8"``, ``"srtf"``, ...) or a policy instance.  Size the
+    cluster with either ``capacity`` (a flat homogeneous cluster of that
+    many GPUs — the paper's setup; default 64) or ``cluster`` (a full
+    :class:`ClusterModel` with topology, contention and restart cost) —
+    passing both with disagreeing sizes is an error, not a silent pick.
     """
-    if strategy.startswith("fixed"):
-        k = int(strategy.split("_")[1])
-        tuples = [(a.spec.job_id, a.remaining, None) for a in active]
-        return sched.fixed(tuples, capacity, k)
-
-    alloc: dict[int, int] = {}
-    dynamic: list[_Active] = []
-    if strategy == "exploratory":
-        cap = _explore_grants(active, capacity, now, alloc, dynamic)
-    else:
-        cap = capacity
-        dynamic = active
-    assert cap >= 0, "explore gang grants exceeded cluster capacity"
-    tuples = [(a.spec.job_id, a.remaining, a.table) for a in dynamic]
-    alloc.update(sched.doubling_heuristic_table(
-        tuples, cap, max_w=[a.spec.max_w for a in dynamic]))
-    return alloc
-
-
-def simulate(jobs: list[JobSpec], capacity: int = 64,
-             strategy: str = "precompute", engine: str = "table") -> SimResult:
-    if capacity < 1:
-        raise ValueError(f"capacity must be >= 1, got {capacity}")
-    if strategy.startswith("fixed"):
-        # stall guard: an unsatisfiable gang size means every job gets the
-        # all-or-nothing 0 grant forever and the event loop would tick on
-        # reschedules for eternity
-        k = int(strategy.split("_")[1])
-        if not 1 <= k <= capacity:
-            raise ValueError(
-                f"{strategy!r} can never run a job on a {capacity}-GPU "
-                f"cluster (gang size must be in [1, capacity])")
+    if cluster is None:
+        cluster = ClusterModel(capacity=64 if capacity is None else capacity)
+    elif capacity is not None and capacity != cluster.capacity:
+        raise ValueError(
+            f"conflicting cluster size: capacity={capacity} but "
+            f"cluster.capacity={cluster.capacity}; pass one or make them "
+            f"agree")
+    policy = sched.get_policy(strategy)
+    # stall guard (e.g. a fixed gang larger than the cluster means every
+    # job gets the all-or-nothing 0 grant forever and the event loop
+    # would tick on reschedules for eternity)
+    policy.validate(cluster)
     if engine == "table":
-        return _simulate_table(jobs, capacity, strategy)
+        return _simulate_table(jobs, cluster, policy)
     if engine == "reference":
-        return _simulate_reference(jobs, capacity, strategy)
+        return _reference.simulate_reference(jobs, cluster, policy)
     raise ValueError(f"unknown engine {engine!r}")
 
 
@@ -262,41 +212,20 @@ class _SoAState:
         self.n = m
         self.index_of = {int(self.ids[i]): i for i in range(m)}
 
-
-def _allocate_soa(strategy: str, st: _SoAState, capacity: int,
-                  now: float) -> np.ndarray:
-    """Target allocation over the SoA active set (fast engine).
-
-    Same semantics (and bit-identical results) as ``_allocate`` /
-    ``_allocate_table``, but in and out are arrays aligned with the
-    active-set order — nothing per-job is materialized on the hot path.
-    """
-    n = st.n
-    if strategy.startswith("fixed"):
-        return sched.fixed_soa(n, capacity, int(strategy.split("_")[1]))
-
-    if strategy == "exploratory":
-        cap = capacity
-        target = np.zeros(n, np.int64)
-        seg = (now - st.explore_started[:n]) // EXPLORE_SEGMENT
-        explorer = seg < len(EXPLORE_WS)
-        for i in np.nonzero(explorer)[0]:
-            grant = min(8, cap)
-            target[i] = min(EXPLORE_WS[int(seg[i])], grant)
-            cap -= grant
-        assert cap >= 0, "explore gang grants exceeded cluster capacity"
-        rows = np.nonzero(~explorer)[0]
-        target[rows] = sched.doubling_heuristic_soa(
-            st.remaining[:n][rows], st.tables, cap,
-            max_w=st.max_w[:n][rows], rows=rows)
-        return target
-    # precompute: all jobs schedulable immediately (rows=None -> row i)
-    return sched.doubling_heuristic_soa(st.remaining[:n], st.tables,
-                                        capacity, max_w=st.max_w[:n])
+    def view(self) -> sched.AllocView:
+        """The policy-facing SoA views over the live rows."""
+        n = self.n
+        return sched.AllocView(remaining=self.remaining[:n],
+                               tables=self.tables,
+                               max_w=self.max_w[:n],
+                               explore_started=self.explore_started[:n])
 
 
-def _simulate_table(jobs: list[JobSpec], capacity: int,
-                    strategy: str) -> SimResult:
+def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
+                    policy: sched.SchedulingPolicy) -> SimResult:
+    capacity = cluster.capacity
+    restart_cost = cluster.restart_cost
+    penalty = cluster.contention_penalty
     pending = sorted(jobs, key=lambda j: j.arrival)
     n_jobs = len(pending)
     pi = 0                        # next-arrival cursor into `pending`
@@ -306,51 +235,56 @@ def _simulate_table(jobs: list[JobSpec], capacity: int,
     now = 0.0
     peak = 0
     next_resched = 0.0
-    is_fixed = strategy.startswith("fixed")
-    fixed_key: bytes | None = None
-    fixed_target: np.ndarray | None = None
+    static_key: bytes | None = None
+    static_target: np.ndarray | None = None
     # Static-event queue: reschedule ticks and restart-freeze expiries, with
     # lazy invalidation (stale entries are discarded at peek time).
-    events: list[tuple[float, int, int]] = [(0.0, _EV_RESCHED, -1)]
+    events: list[tuple[float, int]] = [(0.0, _EV_RESCHED)]
 
     def apply_alloc(now: float) -> None:
-        nonlocal fixed_key, fixed_target
+        nonlocal static_key, static_target
         n = st.n
-        if is_fixed:
-            # fixed_k targets depend only on the active-set order, so a
-            # pure reschedule tick with an unchanged set can reuse the
-            # previous solve verbatim
+        if policy.static:
+            # a static policy's target depends only on the active-set
+            # identity/order, so a pure reschedule tick with an unchanged
+            # set can reuse the previous solve verbatim
             key = st.ids[:n].tobytes()
-            if key != fixed_key:
-                fixed_key = key
-                fixed_target = _allocate_soa(strategy, st, capacity, now)
-            target = fixed_target
+            if key != static_key:
+                static_key = key
+                static_target = policy.allocate(st.view(), cluster, now)
+            target = static_target
         else:
-            target = _allocate_soa(strategy, st, capacity, now)
+            target = policy.allocate(st.view(), cluster, now)
         changed = np.nonzero(target != st.w[:n])[0]
         if not len(changed):
             return
         st.w[:n] = target
         st.speed_now[changed] = st.tables[changed, target[changed]]
-        until = now + RESTART_COST
-        for i in changed:
-            if target[i] > 0:
-                st.frozen[i] = until
-                heapq.heappush(events, (until, _EV_UNFREEZE,
-                                        int(st.ids[i])))
+        until = now + restart_cost
+        # batched restart freeze: every job whose allocation changed
+        # unfreezes at the same instant, so one heap entry covers them all
+        # (the per-job push loop was the last Python loop on this path)
+        started = changed[target[changed] > 0]
+        if len(started):
+            st.frozen[started] = until
+            heapq.heappush(events, (until, _EV_UNFREEZE))
 
     while pi < n_jobs or st.n:
         # --- next event time -------------------------------------------
         # discard stale static events, then peek the earliest valid one
         while events:
-            t, kind, jid = events[0]
+            t, kind = events[0]
             if kind == _EV_RESCHED:
                 if t == next_resched:
                     break
             else:
-                i = st.index_of.get(jid)
-                if (i is not None and st.w[i] > 0 and st.frozen[i] == t
-                        and t > now):
+                # batched unfreeze: valid while any live job still thaws
+                # exactly at t (re-freezes move `frozen` past t and
+                # completions drop rows — either stales the entry)
+                n_ = st.n
+                if (t > now and n_
+                        and bool(np.any((st.frozen[:n_] == t)
+                                        & (st.w[:n_] > 0)))):
                     break
             heapq.heappop(events)
         # a valid reschedule event always exists; an empty queue means the
@@ -366,6 +300,13 @@ def _simulate_table(jobs: list[JobSpec], capacity: int,
             w = st.w[:n]
             frozen = st.frozen[:n]
             speed = st.speed_now[:n]
+            if penalty:
+                # GADGET-style link sharing: every concurrently-allocated
+                # ring job (w >= 2, frozen or not — it holds its links)
+                # runs at contention_factor(k) of nominal speed
+                fac = cluster.contention_factor(int((w >= 2).sum()))
+                if fac != 1.0:
+                    speed = np.where(w >= 2, speed * fac, speed)
             running = np.nonzero((w > 0) & (frozen <= now)
                                  & (speed > 0.0))[0]
             if len(running):
@@ -399,12 +340,14 @@ def _simulate_table(jobs: list[JobSpec], capacity: int,
         while pi < n_jobs and pending[pi].arrival <= now + 1e-9:
             j = pending[pi]
             pi += 1
-            # table to `capacity`, not j.max_w: j.max_w may exceed the
-            # cluster (mixed fleets), and a capacity-sized row makes every
-            # _SoAState.tables row the same width; the solver never probes
-            # past min(j.max_w, capacity) anyway.
-            st.add(j, j.speed_table(capacity),
-                   now if strategy == "exploratory" else None)
+            # the cluster-keyed table row (flat clusters share the int-path
+            # cache, so this is the exact seed table); sized to `capacity`,
+            # not j.max_w: j.max_w may exceed the cluster (mixed fleets),
+            # and a capacity-sized row makes every _SoAState.tables row the
+            # same width — the solver never probes past
+            # min(j.max_w, capacity) anyway.
+            st.add(j, j.speed_table(cluster),
+                   now if policy.explores else None)
             arrived = True
 
         if st.n > peak:
@@ -415,112 +358,43 @@ def _simulate_table(jobs: list[JobSpec], capacity: int,
             if st.n:
                 apply_alloc(now)
             next_resched = now + RESCHEDULE_EVERY
-            heapq.heappush(events, (next_resched, _EV_RESCHED, -1))
+            heapq.heappush(events, (next_resched, _EV_RESCHED))
 
-    return SimResult(strategy=strategy, completion_times=done,
+    return SimResult(strategy=policy.spec, completion_times=done,
                      arrival_times=arrivals, peak_concurrency=peak)
 
 
-def _simulate_reference(jobs: list[JobSpec], capacity: int,
-                        strategy: str) -> SimResult:
-    """The pre-table event loop, kept as the parity/benchmark oracle.
-
-    O(J) candidate rescans, scalar ``JobSpec.speed`` calls throughout, list
-    pops for arrivals — the seed implementation's cost profile.  Must stay
-    behaviorally identical to ``_simulate_table`` (asserted by tests and
-    benchmarks/bench_scheduler.py).
-    """
-    pending = sorted(jobs, key=lambda j: j.arrival)
-    active: list[_Active] = []
-    done: dict[int, float] = {}
-    arrivals = {j.job_id: j.arrival for j in jobs}
-    now = 0.0
-    peak = 0
-    next_resched = 0.0
-
-    def apply_alloc(now: float):
-        target = _allocate(strategy, active, capacity, now)
-        for a in active:
-            w_new = target.get(a.spec.job_id, 0)
-            if w_new != a.w:
-                a.w = w_new
-                if w_new > 0:
-                    a.frozen_until = now + RESTART_COST
-        # also freeze explore-phase jobs at segment switches implicitly via
-        # reschedule events (RESCHEDULE_EVERY == EXPLORE_SEGMENT).
-
-    while pending or active:
-        # --- next event time -------------------------------------------
-        # next_resched is always a candidate, so the list is never empty
-        t_candidates = [next_resched]
-        if pending:
-            t_candidates.append(pending[0].arrival)
-        for a in active:
-            s = a.speed(now)
-            if s > 0:
-                t_candidates.append(max(now, a.frozen_until)
-                                    + a.remaining / s)
-            elif a.w > 0 and a.frozen_until > now:
-                t_candidates.append(a.frozen_until)
-        t_next = max(now, min(t_candidates))
-
-        # --- advance progress -------------------------------------------
-        for a in active:
-            run_from = max(now, a.frozen_until)
-            dt = max(0.0, t_next - run_from)
-            a.remaining -= dt * (a.spec.speed(a.w) if a.w > 0 else 0.0)
-
-        now = t_next
-
-        # --- completions -------------------------------------------------
-        finished = [a for a in active if a.remaining <= 1e-9]
-        for a in finished:
-            done[a.spec.job_id] = now
-            active.remove(a)
-
-        # --- arrivals ----------------------------------------------------
-        arrived = False
-        while pending and pending[0].arrival <= now + 1e-9:
-            j = pending.pop(0)
-            a = _Active(spec=j, remaining=j.epochs)
-            if strategy == "exploratory":
-                a.explore_started = now
-            active.append(a)
-            arrived = True
-
-        peak = max(peak, len(active))
-
-        # --- reallocation ------------------------------------------------
-        if arrived or finished or now + 1e-9 >= next_resched:
-            if active:
-                apply_alloc(now)
-            next_resched = now + RESCHEDULE_EVERY
-
-    return SimResult(strategy=strategy, completion_times=done,
-                     arrival_times=arrivals, peak_concurrency=peak)
+# The paper's Table-3 strategy sweep, plus the registry extensions.
+TABLE3_STRATEGIES = ("precompute", "exploratory", "fixed_8", "fixed_4",
+                     "fixed_2", "fixed_1", "srtf", "utility_greedy")
 
 
-def run_table3(seed: int = 0, capacity: int = 64,
+def run_table3(seed: int = 0, capacity: int | None = None,
                contention: dict[str, tuple[float, int]] | None = None,
                engine: str = "table",
-               pattern: str = "poisson") -> dict[str, dict[str, float]]:
+               pattern: str = "poisson",
+               strategies: tuple[str, ...] | None = None,
+               cluster: ClusterModel | None = None
+               ) -> dict[str, dict[str, float]]:
     """Reproduce Table 3: avg JCT (hours) per strategy x contention level.
 
     ``pattern`` selects the arrival/size process from the workload-pattern
     library (``jobs.WORKLOAD_PATTERNS``); the paper's own Table 3 is the
-    default ``"poisson"`` trace.
+    default ``"poisson"`` trace.  ``strategies`` defaults to the paper's
+    six plus the registry extensions (srtf, utility_greedy); ``cluster``
+    swaps the flat 64-GPU cluster for any :class:`ClusterModel` (e.g. a
+    multi-node topology with a contention penalty).
     """
     from repro.core.jobs import make_workload
     contention = contention or {"extreme": (250.0, 206),
                                 "moderate": (500.0, 114),
                                 "none": (1000.0, 44)}
-    strategies = ["precompute", "exploratory", "fixed_8", "fixed_4",
-                  "fixed_2", "fixed_1"]
+    strategies = TABLE3_STRATEGIES if strategies is None else strategies
     out: dict[str, dict[str, float]] = {}
     for level, (gap, n_jobs) in contention.items():
         jobs = make_workload(pattern, n_jobs, gap, seed)
         out[level] = {}
         for s in strategies:
-            res = simulate(jobs, capacity, s, engine=engine)
+            res = simulate(jobs, capacity, s, engine=engine, cluster=cluster)
             out[level][s] = res.avg_jct_hours
     return out

@@ -104,6 +104,34 @@ def test_simulated_vs_analytic_step_time():
             assert 0.4 < a / s < 2.5, (alg, w, a, s)
 
 
+@pytest.mark.parametrize("hw", [C.TPU_V5E, C.INFINIBAND_100G],
+                         ids=lambda h: h.name)
+@pytest.mark.parametrize("n", [5e6, 4e9], ids=["small_n", "llm_n"])
+def test_step_time_table_matches_scalar(hw, n):
+    """The vectorized ``step_time_table`` must be bit-identical to scalar
+    ``step_time`` at every worker count — straddling every power-of-two
+    boundary up to 64 (where the algorithm choice flips between eq. 3/4
+    and, past the n threshold, to ring) — on both hardware presets.  This
+    is the contract ``JobSpec.speed_table`` (and therefore the simulator's
+    bit-identical-trajectory promise) rests on."""
+    m, tf, tb = 128, 108e-3 / 128, 236.5e-3 / 128
+    ws = np.arange(1, 65)
+    table = C.step_time_table(m, tf, tb, ws, n, hw)
+    scalar = np.array([C.step_time(m, tf, tb, int(w), n, hw) for w in ws])
+    assert np.array_equal(table, scalar)
+    # the boundary rows really exercise both branches: w=2^k uses eq. (3)
+    # (or ring at LLM n), 2^k +- 1 uses eq. (4)
+    for w in (4, 8, 16, 32):
+        assert best_algorithm(w, n) != best_algorithm(w + 1, n)
+
+
+def test_step_time_table_scalar_input_roundtrip():
+    """A 0-d input stays a 0-d/scalar-shaped result with the same value."""
+    got = C.step_time_table(128, 1e-3, 2e-3, np.array(8), 5e6, C.TPU_V5E)
+    want = C.step_time(128, 1e-3, 2e-3, 8, 5e6, C.TPU_V5E)
+    assert float(got) == want
+
+
 def test_pow2_cliff():
     """The 8->9 cliff (paper §4.2): crossing a power-of-two boundary swaps
     doubling-halving (eq. 3) for binary-blocks (eq. 4), whose 7nβ + 3nγ

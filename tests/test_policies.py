@@ -1,0 +1,287 @@
+"""Policy registry + ClusterModel: spec parsing/validation, registry
+round-trips (every registered policy runs a 60-job trace, engines
+bit-identical, pre-refactor completion times preserved), the two new
+policies (SRTF, GADGET-style utility greedy), and the non-flat cluster
+scenario (multi-node topology + contention penalty)."""
+import numpy as np
+import pytest
+
+from repro.collectives.cost import ClusterModel
+from repro.core import scheduler as S
+from repro.core.jobs import JobSpec, synthetic_workload
+from repro.core.simulator import simulate
+
+
+# --------------------------------------------------------------------------
+# Spec parsing + validation
+# --------------------------------------------------------------------------
+
+def test_get_policy_resolves_all_registered_examples():
+    for name, example in S.registered_policies().items():
+        policy = S.get_policy(example)
+        assert isinstance(policy, S.SchedulingPolicy)
+        assert policy.spec == example
+        assert repr(policy)        # repr never raises
+
+
+def test_get_policy_passthrough_and_identity():
+    p = S.FixedPolicy(4)
+    assert S.get_policy(p) is p
+    assert S.get_policy("fixed_16").k == 16
+
+
+@pytest.mark.parametrize("bad,match", [
+    ("fixed", "needs an integer parameter"),
+    ("fixed_x", "must be an integer"),
+    ("fixed_0", "must be >= 1"),
+    ("fixed_-1", "must be >= 1"),
+    ("bogus", "unknown scheduling policy"),
+    ("precompute_3", "takes no parameter"),
+    ("utility_greedy_3", "takes no parameter"),
+    ("", "non-empty string"),
+])
+def test_malformed_specs_fail_loudly(bad, match):
+    """The old engine died inside str.split/int() on these; the registry
+    rejects them up front with an actionable message."""
+    with pytest.raises(ValueError, match=match):
+        S.get_policy(bad)
+
+
+def test_register_policy_rejects_duplicates():
+    with pytest.raises(ValueError, match="already registered"):
+        S.register_policy("fixed", lambda p: S.FixedPolicy(1))
+
+
+def test_unknown_policy_error_lists_registry():
+    with pytest.raises(ValueError, match="precompute"):
+        S.get_policy("no_such_policy")
+
+
+# --------------------------------------------------------------------------
+# Registry round-trip: pre-refactor parity on the 60-job trace
+# --------------------------------------------------------------------------
+
+# avg JCT (hours) produced by the pre-registry implementation (main @ PR 2)
+# on synthetic_workload(60, 500.0, 0), capacity 64 — the refactor must
+# reproduce these bit-for-bit on a flat homogeneous cluster.
+PRE_REFACTOR_JCT_HOURS = {
+    "precompute": 1.871922560745595,
+    "exploratory": 2.1010226326262185,
+    "fixed_8": 2.0074955131017864,
+    "fixed_4": 2.1384725028154628,
+    "fixed_2": 3.5068568497974564,
+    "fixed_1": 6.250871048451913,
+}
+
+
+@pytest.fixture(scope="module")
+def trace60():
+    return synthetic_workload(60, 500.0, 0)
+
+
+@pytest.mark.parametrize("strat", sorted(PRE_REFACTOR_JCT_HOURS))
+def test_pre_refactor_completion_times_preserved(trace60, strat):
+    res = simulate(trace60, 64, strat)
+    assert res.avg_jct_hours == PRE_REFACTOR_JCT_HOURS[strat], strat
+
+
+def test_every_registered_policy_round_trips(trace60):
+    """Every registry entry (including future ones) must complete the
+    60-job trace with table/reference engine bit-identity."""
+    for strat in S.registered_policies().values():
+        fast = simulate(trace60, 64, strat, engine="table")
+        ref = simulate(trace60, 64, strat, engine="reference")
+        assert len(fast.completion_times) == 60, strat
+        assert fast.completion_times == ref.completion_times, strat
+        assert fast.peak_concurrency == ref.peak_concurrency, strat
+        assert fast.strategy == strat
+
+
+# --------------------------------------------------------------------------
+# The new policies
+# --------------------------------------------------------------------------
+
+def _view(specs, remaining=None, width=16):
+    tables = np.stack([s.speed_table(width) for s in specs])
+    return S.AllocView(
+        remaining=np.array([s.epochs for s in specs] if remaining is None
+                           else remaining, float),
+        tables=tables,
+        max_w=np.array([s.max_w for s in specs], np.int64),
+        explore_started=np.full(len(specs), -np.inf))
+
+
+def test_srtf_prioritizes_shortest_job():
+    """With capacity for only one job, SRTF runs the job with the least
+    remaining service time and leaves the longer one at 0."""
+    short = JobSpec(job_id=0, arrival=0.0, epochs=10.0)
+    long = JobSpec(job_id=1, arrival=0.0, epochs=500.0)
+    view = _view([long, short], remaining=[500.0, 10.0], width=8)
+    target = S.SRTFPolicy().allocate(view, ClusterModel(capacity=8), 0.0)
+    assert target[1] >= 1          # the short job runs...
+    assert target[0] == 0          # ...the long one waits
+    # capacity respected with more jobs than GPUs
+    many = [JobSpec(job_id=j, arrival=0.0, epochs=float(100 + j))
+            for j in range(6)]
+    t = S.SRTFPolicy().allocate(_view(many), ClusterModel(capacity=4), 0.0)
+    assert t.sum() <= 4
+
+
+def test_srtf_respects_per_job_caps():
+    jobs = [JobSpec(job_id=0, arrival=0.0, epochs=10.0, max_w=2),
+            JobSpec(job_id=1, arrival=0.0, epochs=20.0, max_w=8)]
+    t = S.SRTFPolicy().allocate(_view(jobs), ClusterModel(capacity=32), 0.0)
+    assert t[0] <= 2 and t[1] <= 8
+
+
+def test_utility_greedy_is_size_blind_and_pow2():
+    """GADGET-style utility: the target depends only on the speed tables,
+    never on remaining work — and doubling keeps allocations at powers of
+    two."""
+    specs = [JobSpec(job_id=j, arrival=0.0, epochs=150.0) for j in range(4)]
+    cluster = ClusterModel(capacity=16)
+    pol = S.UtilityGreedyPolicy()
+    a = pol.allocate(_view(specs, remaining=[1.0, 10.0, 100.0, 1000.0]),
+                     cluster, 0.0)
+    b = pol.allocate(_view(specs, remaining=[1000.0, 100.0, 10.0, 1.0]),
+                     cluster, 0.0)
+    assert np.array_equal(a, b)                   # Q-blind
+    assert all(w == 0 or (w & (w - 1)) == 0 for w in a)   # pow2 invariant
+    assert a.sum() <= cluster.capacity
+    assert pol.static                             # solve reuse is sound
+
+
+def test_utility_greedy_respects_caps_and_fifo():
+    specs = [JobSpec(job_id=j, arrival=0.0, epochs=150.0, max_w=2)
+             for j in range(3)]
+    t = S.UtilityGreedyPolicy().allocate(_view(specs),
+                                         ClusterModel(capacity=32), 0.0)
+    assert (t <= 2).all() and (t >= 1).all()
+    # oversubscribed: FIFO — later jobs get 0 first
+    many = [JobSpec(job_id=j, arrival=0.0, epochs=150.0) for j in range(6)]
+    t = S.UtilityGreedyPolicy().allocate(_view(many),
+                                         ClusterModel(capacity=4), 0.0)
+    assert (t[:4] >= 1).all() and (t[4:] == 0).all()
+
+
+def test_new_policies_complete_heavy_tailed_trace():
+    """SRTF's home turf: heavy-tailed job sizes.  Both new policies must
+    finish the trace on both engines, bit-identically."""
+    from repro.core.jobs import make_workload
+    jobs = make_workload("heavy_tailed", 30, 400.0, 3)
+    for strat in ("srtf", "utility_greedy"):
+        fast = simulate(jobs, 32, strat)
+        ref = simulate(jobs, 32, strat, engine="reference")
+        assert len(fast.completion_times) == 30, strat
+        assert fast.completion_times == ref.completion_times, strat
+
+
+# --------------------------------------------------------------------------
+# ClusterModel: validation, topology tables, contention
+# --------------------------------------------------------------------------
+
+def test_cluster_model_validation():
+    with pytest.raises(ValueError, match="capacity must be"):
+        ClusterModel(capacity=0)
+    with pytest.raises(ValueError, match="inter_node_beta"):
+        ClusterModel(gpus_per_node=8)
+    with pytest.raises(ValueError, match="gpus_per_node"):
+        ClusterModel(gpus_per_node=0, inter_node_beta=1e-9)
+    with pytest.raises(ValueError, match="faster than the intra-node"):
+        ClusterModel(gpus_per_node=8, inter_node_beta=1e-12)
+    with pytest.raises(ValueError, match="without gpus_per_node"):
+        ClusterModel(inter_node_beta=1e-9)     # forgot the node size
+    with pytest.raises(ValueError, match="contention_penalty"):
+        ClusterModel(contention_penalty=-0.1)
+
+
+def test_cluster_model_contention_factor():
+    cm = ClusterModel(contention_penalty=0.5)
+    assert cm.contention_factor(0) == cm.contention_factor(1) == 1.0
+    assert cm.contention_factor(2) == pytest.approx(1.0 / 1.5)
+    assert cm.contention_factor(3) == pytest.approx(0.5)
+    assert ClusterModel().contention_factor(10) == 1.0
+
+
+def test_flat_cluster_model_is_bit_identical_to_capacity_int(trace60):
+    flat = ClusterModel(capacity=64)
+    assert flat.is_flat
+    for strat in ("precompute", "fixed_8"):
+        a = simulate(trace60, 64, strat)
+        b = simulate(trace60, strategy=strat, cluster=flat)
+        assert a.completion_times == b.completion_times, strat
+
+
+def test_topology_speed_table_scales_spanning_rows():
+    job = JobSpec(job_id=0, arrival=0.0, epochs=150.0)
+    topo = ClusterModel(capacity=16, gpus_per_node=4,
+                        inter_node_beta=1.0 / 1.25e9)
+    flat_tab = job.speed_table(16)
+    topo_tab = job.speed_table(topo)
+    assert np.array_equal(topo_tab[:5], flat_tab[:5])    # intra-node rows
+    assert (topo_tab[5:] < flat_tab[5:]).all()           # spanning rows pay
+    assert job.speed_table(topo) is topo_tab             # cached per cluster
+    # flat ClusterModel shares the int-path cache outright
+    assert job.speed_table(ClusterModel(capacity=16)) is flat_tab
+
+
+def test_multinode_contention_scenario_engine_parity():
+    """The acceptance scenario: multi-node topology + contention penalty.
+    Both engines agree bit-for-bit and the non-flat cluster is never
+    faster than the flat one."""
+    cluster = ClusterModel(capacity=32, gpus_per_node=8,
+                           inter_node_beta=1.0 / 1.25e9,
+                           contention_penalty=0.1)
+    jobs = synthetic_workload(20, 500.0, 11)
+    for strat in S.registered_policies().values():
+        fast = simulate(jobs, strategy=strat, cluster=cluster)
+        ref = simulate(jobs, strategy=strat, cluster=cluster,
+                       engine="reference")
+        assert fast.completion_times == ref.completion_times, strat
+        flat = simulate(jobs, 32, strat)
+        assert fast.avg_jct_hours >= flat.avg_jct_hours - 1e-9, strat
+
+
+def test_contention_slows_concurrent_ring_jobs():
+    """Two overlapping w>=2 jobs under a contention penalty finish later
+    than without one; a single job (k=1) is unaffected."""
+    cont = ClusterModel(capacity=16, contention_penalty=0.5)
+    two = [JobSpec(job_id=0, arrival=0.0, epochs=100.0),
+           JobSpec(job_id=1, arrival=0.0, epochs=100.0)]
+    base = simulate(two, 16, "fixed_8")
+    hit = simulate(two, strategy="fixed_8", cluster=cont)
+    assert hit.avg_jct_hours > base.avg_jct_hours * 1.3
+    solo = [JobSpec(job_id=0, arrival=0.0, epochs=100.0)]
+    assert (simulate(solo, strategy="fixed_8", cluster=cont).avg_jct_hours
+            == simulate(solo, 16, "fixed_8").avg_jct_hours)
+
+
+def test_run_table3_multinode_rows():
+    """run_table3 accepts a ClusterModel and produces rows for the new
+    policies alongside the paper's six."""
+    from repro.core.simulator import run_table3
+    cluster = ClusterModel(capacity=64, gpus_per_node=8,
+                           inter_node_beta=1.0 / 1.25e9,
+                           contention_penalty=0.05)
+    out = run_table3(seed=0, contention={"tiny": (500.0, 12)},
+                     cluster=cluster)
+    row = out["tiny"]
+    for strat in ("precompute", "fixed_8", "srtf", "utility_greedy"):
+        assert strat in row and row[strat] > 0.0
+
+
+def test_simresult_strategy_is_canonical_spec(trace60):
+    res = simulate(trace60[:5], 64, S.FixedPolicy(2))
+    assert res.strategy == "fixed_2"
+
+
+def test_conflicting_capacity_and_cluster_rejected(trace60):
+    """Passing both a capacity and a cluster of a different size is a
+    loud error, not a silently mis-scaled experiment."""
+    with pytest.raises(ValueError, match="conflicting cluster size"):
+        simulate(trace60[:5], 32, "precompute",
+                 cluster=ClusterModel(capacity=64))
+    # agreeing sizes are fine
+    res = simulate(trace60[:5], 64, "precompute",
+                   cluster=ClusterModel(capacity=64))
+    assert len(res.completion_times) == 5

@@ -2,13 +2,15 @@
 
 Property-style (randomized, seeded — no hypothesis dependency): on random
 (Q, speed-table) instances the lazy-heap table solvers must return the
-exact allocation the original O(J)-rescan implementations return, and
+exact allocation the original O(J)-rescan implementations (the
+``repro.core._reference`` parity oracle) return, and
 ``exact_dp(powers_of_two=True)`` must lower-bound the doubling heuristic's
 total time (the heuristic emits only power-of-two allocations).
 """
 import numpy as np
 import pytest
 
+from repro.core import _reference as R
 from repro.core import scheduler as S
 from repro.core.jobs import JobSpec
 
@@ -41,10 +43,10 @@ def test_doubling_table_matches_callable(seed):
         bound = S._table_bound(capacity, max_w)
         jc, jt = random_instance(rng, n_jobs, bound)
         assert (S.doubling_heuristic_table(jt, capacity, max_w)
-                == S.doubling_heuristic_ref(jc, capacity, max_w))
+                == R.doubling_heuristic_ref(jc, capacity, max_w))
         # thin adapter delegates to the same solver
         assert (S.doubling_heuristic(jc, capacity, max_w)
-                == S.doubling_heuristic_ref(jc, capacity, max_w))
+                == R.doubling_heuristic_ref(jc, capacity, max_w))
 
 
 @pytest.mark.parametrize("seed", range(8))
@@ -59,7 +61,7 @@ def test_doubling_soa_matches_reference(seed):
         max_w = [None, 4, 8, 16][int(rng.integers(0, 4))]
         bound = S._table_bound(capacity, max_w)
         jc, jt = random_instance(rng, n_jobs, bound)
-        want = S.doubling_heuristic_ref(jc, capacity, max_w)
+        want = R.doubling_heuristic_ref(jc, capacity, max_w)
         Q = np.array([q for (_, q, _) in jt])
         tables = np.array([t for (_, _, t) in jt])
         got = S.doubling_heuristic_soa(Q, tables, capacity, max_w)
@@ -84,7 +86,7 @@ def test_per_job_caps_respected_and_consistent(seed):
         bound = S._table_bound(capacity, 16)
         jc, jt = random_instance(rng, n_jobs, bound)
         caps = [int(c) for c in rng.choice([2, 4, 8, 16], n_jobs)]
-        want = S.doubling_heuristic_ref(jc, capacity, max_w=caps)
+        want = R.doubling_heuristic_ref(jc, capacity, max_w=caps)
         assert all(want[j] <= caps[j] for j in range(n_jobs))
         assert S.doubling_heuristic_table(jt, capacity, max_w=caps) == want
         Q = np.array([q for (_, q, _) in jt])
@@ -93,8 +95,8 @@ def test_per_job_caps_respected_and_consistent(seed):
                                        max_w=np.array(caps))
         assert {j: int(w) for (j, _, _), w in zip(jt, got)} == want
         # scalar == homogeneous per-job list
-        assert (S.doubling_heuristic_ref(jc, capacity, max_w=8)
-                == S.doubling_heuristic_ref(jc, capacity,
+        assert (R.doubling_heuristic_ref(jc, capacity, max_w=8)
+                == R.doubling_heuristic_ref(jc, capacity,
                                             max_w=[8] * n_jobs))
 
 
@@ -120,9 +122,9 @@ def test_optimus_table_matches_callable(seed):
         bound = S._table_bound(capacity, max_w)
         jc, jt = random_instance(rng, n_jobs, bound)
         assert (S.optimus_greedy_table(jt, capacity, max_w)
-                == S.optimus_greedy_ref(jc, capacity, max_w))
+                == R.optimus_greedy_ref(jc, capacity, max_w))
         assert (S.optimus_greedy(jc, capacity, max_w)
-                == S.optimus_greedy_ref(jc, capacity, max_w))
+                == R.optimus_greedy_ref(jc, capacity, max_w))
 
 
 @pytest.mark.parametrize("seed", range(4))
@@ -136,9 +138,9 @@ def test_exact_dp_table_matches_callable(seed):
         jc, jt = random_instance(rng, n_jobs, bound)
         for p2 in (False, True):
             assert (S.exact_dp_table(jt, capacity, max_w, powers_of_two=p2)
-                    == S.exact_dp_ref(jc, capacity, max_w, powers_of_two=p2))
+                    == R.exact_dp_ref(jc, capacity, max_w, powers_of_two=p2))
             assert (S.exact_dp(jc, capacity, max_w, powers_of_two=p2)
-                    == S.exact_dp_ref(jc, capacity, max_w, powers_of_two=p2))
+                    == R.exact_dp_ref(jc, capacity, max_w, powers_of_two=p2))
 
 
 @pytest.mark.parametrize("seed", range(6))

@@ -103,8 +103,7 @@ def test_explore_gang_grant_clamped_to_capacity():
 
     def make_active(jid, started):
         spec = JobSpec(job_id=jid, arrival=0.0, epochs=100.0)
-        return _Active(spec=spec, remaining=100.0, explore_started=started,
-                       table=spec.speed_table(spec.max_w).tolist())
+        return _Active(spec=spec, remaining=100.0, explore_started=started)
 
     now = 1000.0
     started = now - (3 * 150.0 + 1.0)       # 4th segment: explore_w == 8
@@ -118,9 +117,7 @@ def test_explore_gang_grant_clamped_to_capacity():
     # with a dynamic job in the mix, the solver is handed cap >= 0 and the
     # total grant never exceeds the cluster
     active.append(_Active(spec=JobSpec(job_id=2, arrival=0.0, epochs=50.0),
-                          remaining=50.0,
-                          table=JobSpec(job_id=2, arrival=0.0,
-                                        epochs=50.0).speed_table(8).tolist()))
+                          remaining=50.0))
     for allocate in (_allocate, _allocate_table):
         alloc = allocate("exploratory", active, 10, now)
         assert sum(alloc.values()) <= 10
