@@ -32,6 +32,19 @@ INFINIBAND_100G = HardwareCoefficients(
 
 
 @dataclasses.dataclass(frozen=True)
+class NodeSpec:
+    """One physical node of the cluster: a GPU count plus (optionally) its
+    own :class:`HardwareCoefficients` for heterogeneous fleets.  ``hw=None``
+    means the node runs at the cluster-wide coefficients."""
+    gpus: int
+    hw: HardwareCoefficients | None = None
+
+    def __post_init__(self):
+        if self.gpus < 1:
+            raise ValueError(f"NodeSpec.gpus must be >= 1, got {self.gpus}")
+
+
+@dataclasses.dataclass(frozen=True)
 class ClusterModel:
     """The cluster the §7 simulation schedules over.
 
@@ -52,13 +65,38 @@ class ClusterModel:
       * ``contention_penalty`` — GADGET-style multi-tenant link sharing:
         when k concurrent jobs run ring all-reduce (w >= 2), each of them
         progresses at ``contention_factor(k) = 1 / (1 + penalty*(k-1))``
-        of its nominal speed.  0.0 (default) disables it.
+        of its nominal speed.  0.0 (default) disables it.  With a
+        placement engine active only *node-spanning* rings contend (they
+        share the inter-node fabric; intra-node rings never touch it).
       * ``restart_cost`` — checkpoint-stop-restart pause per reallocation
         (~10 s measured, paper §6).
+      * ``nodes`` — explicit per-node layout (tuple of :class:`NodeSpec`)
+        for heterogeneous fleets; requires ``placement``.  Mutually
+        exclusive with ``gpus_per_node``, and the GPU counts must sum to
+        ``capacity``.
+      * ``placement`` — name of a registered
+        :class:`repro.core.placement.PlacementStrategy` (``"packed"``,
+        ``"spread"``, ``"best_fit"``).  When set, both simulator engines
+        run the node-level placement engine: each gang gets a concrete
+        per-node assignment, spanning/contention status derives from the
+        *actual* assignment under fragmentation (not the
+        ``w > gpus_per_node`` shortcut), and policies see the flat speed
+        tables plus a placement view.  ``None`` (default) keeps the
+        legacy behavior.
+      * ``admission`` — name of a registered admission rule
+        (``"admit_all"``, ``"queue_cap_<n>"``, ``"free_gpus_<k>"``);
+        non-default rules require ``placement``.
+      * ``defrag`` — run the migration/defragmentation pass: at each
+        reallocation event, a node-spanning gang that now fits on a
+        single node is consolidated there, charging ``restart_cost``
+        (the gang moves).  Requires ``placement``.
 
     A flat homogeneous ClusterModel (defaults) reproduces the paper setup
     bit-identically — the engines and speed tables take the exact same
-    code paths as a bare integer capacity.
+    code paths as a bare integer capacity.  A placement engine over a
+    single node (``placement`` set, no topology) is a structural no-op:
+    nothing ever spans, every factor is exactly 1.0, and trajectories
+    stay bit-identical to the flat cluster (golden-value-tested).
     """
     capacity: int = 64
     hw: HardwareCoefficients = INFINIBAND_100G
@@ -66,10 +104,32 @@ class ClusterModel:
     inter_node_beta: float | None = None
     contention_penalty: float = 0.0
     restart_cost: float = 10.0
+    nodes: tuple[NodeSpec, ...] | None = None
+    placement: str | None = None
+    admission: str = "admit_all"
+    defrag: bool = False
 
     def __post_init__(self):
         if self.capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {self.capacity}")
+        if self.nodes is not None:
+            if self.gpus_per_node is not None:
+                raise ValueError(
+                    "pass either nodes (explicit layout) or gpus_per_node "
+                    "(uniform layout), not both")
+            if self.placement is None:
+                raise ValueError(
+                    "nodes without placement does nothing — node-level "
+                    "layouts are consumed by the placement engine")
+            total = sum(n.gpus for n in self.nodes)
+            if total != self.capacity:
+                raise ValueError(
+                    f"nodes sum to {total} GPUs but capacity is "
+                    f"{self.capacity}; make them agree")
+            if len(self.nodes) > 1 and self.inter_node_beta is None:
+                raise ValueError(
+                    "a multi-node ClusterModel needs inter_node_beta "
+                    "(cross-node per-byte transfer time)")
         if self.gpus_per_node is not None:
             if self.gpus_per_node < 1:
                 raise ValueError(
@@ -78,25 +138,58 @@ class ClusterModel:
                 raise ValueError(
                     "a multi-node ClusterModel needs inter_node_beta "
                     "(cross-node per-byte transfer time)")
-            if self.inter_node_beta < self.hw.beta:
-                raise ValueError(
-                    "inter_node_beta is faster than the intra-node link "
-                    f"({self.inter_node_beta} < {self.hw.beta})")
-        elif self.inter_node_beta is not None:
+        elif self.inter_node_beta is not None and self.nodes is None:
             # the symmetric mistake: a cross-node β without a node size
             # would silently reproduce flat-cluster results
             raise ValueError(
                 "inter_node_beta without gpus_per_node does nothing — "
                 "set both (multi-node) or neither (flat)")
+        if self.inter_node_beta is not None:
+            betas = [self.hw.beta] + [n.hw.beta for n in (self.nodes or ())
+                                      if n.hw is not None]
+            if self.inter_node_beta < max(betas):
+                raise ValueError(
+                    "inter_node_beta is faster than the intra-node link "
+                    f"({self.inter_node_beta} < {max(betas)})")
         if self.contention_penalty < 0.0:
             raise ValueError(
                 f"contention_penalty must be >= 0, got "
                 f"{self.contention_penalty}")
+        if self.placement is not None:
+            # deferred import: placement builds on this module
+            from repro.core.placement import get_admission, get_placement
+            get_placement(self.placement)          # loud unknown-name error
+            get_admission(self.admission).validate(self)
+        elif self.admission != "admit_all":
+            raise ValueError(
+                "an admission rule without placement does nothing — set "
+                "placement (a single-node placement engine is a no-op) "
+                "or drop admission")
+        elif self.defrag:
+            raise ValueError(
+                "defrag without placement does nothing — the migration "
+                "pass moves gangs the placement engine placed")
 
     @property
     def is_flat(self) -> bool:
         """True when this is the paper's flat homogeneous cluster."""
-        return self.gpus_per_node is None and self.contention_penalty == 0.0
+        return (self.gpus_per_node is None and self.contention_penalty == 0.0
+                and self.placement is None)
+
+    def node_specs(self) -> tuple[NodeSpec, ...]:
+        """The node-level layout the placement engine schedules over:
+        ``nodes`` verbatim, or ``capacity`` split into uniform
+        ``gpus_per_node`` chunks (last node partial), or one node holding
+        the whole flat cluster."""
+        if self.nodes is not None:
+            return self.nodes
+        if self.gpus_per_node is None:
+            return (NodeSpec(gpus=self.capacity),)
+        full, rest = divmod(self.capacity, self.gpus_per_node)
+        out = [NodeSpec(gpus=self.gpus_per_node) for _ in range(full)]
+        if rest:
+            out.append(NodeSpec(gpus=rest))
+        return tuple(out)
 
     def spans_nodes(self, w) -> bool | np.ndarray:
         """Whether a w-worker ring crosses node boundaries (scalar or

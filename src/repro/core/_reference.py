@@ -152,6 +152,10 @@ class _Active:
     # scalar f(w): the job's own ``spec.speed`` on a flat cluster (the
     # seed cost profile), a cluster-scaled table lookup on a topology
     speed_fn: object = None
+    # placement-engine state: speed multiplier for the current gang
+    # assignment and its actual spanning flag (1.0 / False off-placement)
+    place_factor: float = 1.0
+    spans: bool = False
 
     def __post_init__(self):
         if self.speed_fn is None:
@@ -169,7 +173,10 @@ class _Active:
     def speed(self, now: float) -> float:
         if now < self.frozen_until or self.w <= 0:
             return 0.0
-        return self.speed_fn(self.w)
+        s = self.speed_fn(self.w)
+        # guarded multiply: the flat seed arithmetic stays byte-for-byte
+        # untouched (x * 1.0 would be exact too, but why touch it)
+        return s if self.place_factor == 1.0 else s * self.place_factor
 
 
 def _explore_grants(active: list[_Active], capacity: int, now: float,
@@ -193,7 +200,8 @@ def _explore_grants(active: list[_Active], capacity: int, now: float,
     return cap
 
 
-def _view_of(active: list[_Active], cluster: ClusterModel) -> sched.AllocView:
+def _view_of(active: list[_Active], cluster: ClusterModel,
+             placement=None) -> sched.AllocView:
     """SoA views over an ``_Active`` list, built per solve (oracle only)."""
     return sched.AllocView(
         remaining=np.array([a.remaining for a in active]),
@@ -202,7 +210,8 @@ def _view_of(active: list[_Active], cluster: ClusterModel) -> sched.AllocView:
         max_w=np.array([a.spec.max_w for a in active], np.int64),
         explore_started=np.array(
             [-np.inf if a.explore_started is None else a.explore_started
-             for a in active]))
+             for a in active]),
+        placement=placement)
 
 
 def _allocate_seed(policy: sched.SchedulingPolicy, active: list[_Active],
@@ -243,44 +252,87 @@ def simulate_reference(jobs: list[JobSpec], cluster: ClusterModel,
     capacity = cluster.capacity
     penalty = cluster.contention_penalty
     flat_fabric = cluster.gpus_per_node is None
+    peng = None
+    if cluster.placement is not None:
+        from repro.core.placement import PlacementEngine
+        peng = PlacementEngine(cluster)
     pending = sorted(jobs, key=lambda j: j.arrival)
     active: list[_Active] = []
     done: dict[int, float] = {}
     arrivals = {j.job_id: j.arrival for j in jobs}
+    delayed: list[JobSpec] = []
+    rejected: list[int] = []
     now = 0.0
     peak = 0
     next_resched = 0.0
     seed_policy = isinstance(policy, _SEED_POLICIES)
 
+    def _admit(j: JobSpec, now: float) -> None:
+        a = _Active(spec=j, remaining=j.epochs)
+        if not flat_fabric or peng is not None:
+            # placement engines run over the *flat* table (speed_table
+            # returns it when cluster.placement is set) and scale by the
+            # per-assignment factor instead of baked spanning rows
+            table = j.speed_table(cluster)
+            a.speed_fn = lambda w, t=table: float(t[w])
+        if policy.explores:
+            a.explore_started = now
+        if peng is not None:
+            peng.register(j)
+        active.append(a)
+
     def apply_alloc(now: float):
         if seed_policy:
             target = _allocate_seed(policy, active, capacity, now)
         else:
-            soa = policy.allocate(_view_of(active, cluster), cluster, now)
+            soa = policy.allocate(
+                _view_of(active, cluster,
+                         None if peng is None else peng.view()),
+                cluster, now)
             target = {a.spec.job_id: int(w) for a, w in zip(active, soa)}
-        for a in active:
-            w_new = target.get(a.spec.job_id, 0)
-            if w_new != a.w:
-                a.w = w_new
-                if w_new > 0:
-                    a.frozen_until = now + cluster.restart_cost
+        if peng is None:
+            for a in active:
+                w_new = target.get(a.spec.job_id, 0)
+                if w_new != a.w:
+                    a.w = w_new
+                    if w_new > 0:
+                        a.frozen_until = now + cluster.restart_cost
+            return
+        ids = [a.spec.job_id for a in active]
+        tvec = [target.get(jid, 0) for jid in ids]
+        changed = [i for i, a in enumerate(active) if tvec[i] != a.w]
+        upd, factors, spans = peng.apply(ids, tvec, changed)
+        for i, a in enumerate(active):
+            a.w = tvec[i]
+        for pos, f, sp in zip(upd.tolist(), factors.tolist(),
+                              spans.tolist()):
+            a = active[pos]
+            a.place_factor = f
+            a.spans = sp
+            if a.w > 0:
+                a.frozen_until = now + cluster.restart_cost
         # also freeze explore-phase jobs at segment switches implicitly via
         # reschedule events (RESCHEDULE_EVERY == EXPLORE_SEGMENT).
 
-    while pending or active:
+    while pending or active or delayed:
         # --- next event time -------------------------------------------
         # next_resched is always a candidate, so the list is never empty
         fac = 1.0
         if penalty:
-            fac = cluster.contention_factor(
-                sum(1 for a in active if a.w >= 2))
+            if peng is not None:
+                fac = cluster.contention_factor(
+                    sum(1 for a in active if a.spans))
+            else:
+                fac = cluster.contention_factor(
+                    sum(1 for a in active if a.w >= 2))
         t_candidates = [next_resched]
         if pending:
             t_candidates.append(pending[0].arrival)
         for a in active:
             s = a.speed(now)
             if s > 0:
-                if fac != 1.0 and a.w >= 2:
+                if fac != 1.0 and (a.spans if peng is not None
+                                   else a.w >= 2):
                     s *= fac
                 t_candidates.append(max(now, a.frozen_until)
                                     + a.remaining / s)
@@ -293,7 +345,9 @@ def simulate_reference(jobs: list[JobSpec], cluster: ClusterModel,
             run_from = max(now, a.frozen_until)
             dt = max(0.0, t_next - run_from)
             s = a.speed_fn(a.w) if a.w > 0 else 0.0
-            if fac != 1.0 and a.w >= 2:
+            if a.place_factor != 1.0:
+                s *= a.place_factor
+            if fac != 1.0 and (a.spans if peng is not None else a.w >= 2):
                 s *= fac
             a.remaining -= dt * s
 
@@ -304,18 +358,38 @@ def simulate_reference(jobs: list[JobSpec], cluster: ClusterModel,
         for a in finished:
             done[a.spec.job_id] = now
             active.remove(a)
+            if peng is not None:
+                peng.release(a.spec.job_id)
 
         # --- arrivals ----------------------------------------------------
         arrived = False
+        if delayed:
+            still: list[JobSpec] = []
+            for j in delayed:
+                verdict = peng.admit(j, len(active), len(still), now)
+                if verdict == "admit":
+                    _admit(j, now)
+                    arrived = True
+                elif verdict == "reject":
+                    rejected.append(j.job_id)
+                else:
+                    still.append(j)
+            if still and not arrived and not active and not pending:
+                raise RuntimeError(
+                    f"admission rule {cluster.admission!r} stalled: "
+                    f"{len(still)} delayed jobs on an idle cluster")
+            delayed = still
         while pending and pending[0].arrival <= now + 1e-9:
             j = pending.pop(0)
-            a = _Active(spec=j, remaining=j.epochs)
-            if not flat_fabric:
-                table = j.speed_table(cluster)
-                a.speed_fn = lambda w, t=table: float(t[w])
-            if policy.explores:
-                a.explore_started = now
-            active.append(a)
+            if peng is not None:
+                verdict = peng.admit(j, len(active), len(delayed), now)
+                if verdict == "delay":
+                    delayed.append(j)
+                    continue
+                if verdict == "reject":
+                    rejected.append(j.job_id)
+                    continue
+            _admit(j, now)
             arrived = True
 
         peak = max(peak, len(active))
@@ -327,4 +401,6 @@ def simulate_reference(jobs: list[JobSpec], cluster: ClusterModel,
             next_resched = now + RESCHEDULE_EVERY
 
     return SimResult(strategy=policy.spec, completion_times=done,
-                     arrival_times=arrivals, peak_concurrency=peak)
+                     arrival_times=arrivals, peak_concurrency=peak,
+                     rejected=tuple(rejected),
+                     migrations=0 if peng is None else peng.migrations)

@@ -85,7 +85,10 @@ class JobSpec:
         don't mutate JobSpec fields after the first call.
         """
         if isinstance(cluster, cost_lib.ClusterModel):
-            if cluster.gpus_per_node is None:
+            if cluster.gpus_per_node is None or cluster.placement is not None:
+                # flat fabric — or a placement engine, which owns the
+                # spanning decision per *actual* assignment and applies
+                # it as a factor over the flat table (``placement_factor``)
                 return self.speed_table(cluster.capacity)
             return self._cluster_speed_table(cluster)
         max_w = self.max_w if cluster is None else int(cluster)
@@ -120,6 +123,33 @@ class JobSpec:
                 tab[span] *= t_intra / t_inter
             tab.flags.writeable = False
             cache[cluster] = tab
+        return tab
+
+    def placement_factor(self, cluster, hw_eff) -> np.ndarray:
+        """Speed multiplier table for a gang running on effective
+        coefficients ``hw_eff`` instead of the cluster baseline:
+        ``factor[w] = t_base(w) / t_eff(w)`` (the analytic step-time
+        ratio — the same scaling ``_cluster_speed_table`` bakes into
+        spanning rows, here applied per *actual* placement by the
+        placement engine).  Cached per (capacity, hw_eff); index 0 is
+        1.0 (unused)."""
+        cache = self.__dict__.setdefault("_factor_tables", {})
+        # the baseline hw is part of the key: equal-capacity clusters with
+        # different baseline coefficients must not share factor tables
+        key = (cluster.capacity, cluster.hw, hw_eff)
+        tab = cache.get(key)
+        if tab is None:
+            ws = np.arange(1, cluster.capacity + 1, dtype=float)
+            t_base = cost_lib.step_time_table(self.m, self.T_fwd,
+                                              self.T_back, ws, self.n_bytes,
+                                              cluster.hw)
+            t_eff = cost_lib.step_time_table(self.m, self.T_fwd,
+                                             self.T_back, ws, self.n_bytes,
+                                             hw_eff)
+            tab = np.ones(cluster.capacity + 1)
+            tab[1:] = t_base / t_eff
+            tab.flags.writeable = False
+            cache[key] = tab
         return tab
 
     def _build_speed_table(self, max_w: int) -> np.ndarray:

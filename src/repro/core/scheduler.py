@@ -381,6 +381,9 @@ class AllocView:
     explore_started: np.ndarray          # (n,) explore-phase start, -inf
                                          # when the job never profiles
     rows: np.ndarray | None = None       # job i's row in `tables`
+    # node-level snapshot (repro.core.placement.PlacementView) when the
+    # cluster runs a placement engine; None on flat/legacy clusters
+    placement: object | None = None
 
     @property
     def n(self) -> int:
@@ -462,9 +465,7 @@ def get_policy(spec: str | SchedulingPolicy) -> SchedulingPolicy:
     if not isinstance(spec, str) or not spec:
         raise ValueError(f"policy spec must be a non-empty string, "
                          f"got {spec!r}")
-    base, param = spec, None
-    if base not in _POLICY_REGISTRY and "_" in base:
-        base, param = spec.rsplit("_", 1)
+    base, param = _split_spec(_POLICY_REGISTRY, spec)
     entry = _POLICY_REGISTRY.get(base)
     if entry is None:
         raise ValueError(
@@ -473,23 +474,37 @@ def get_policy(spec: str | SchedulingPolicy) -> SchedulingPolicy:
     return entry.factory(param)
 
 
-def _no_param(name: str, param: str | None) -> None:
+def _split_spec(registry, spec: str) -> tuple[str, str | None]:
+    """Longest registered prefix at an underscore boundary wins, so a
+    name parameterized by another spec ("pack_utility_greedy" -> pack
+    with param "utility_greedy") parses as well as "fixed_8".  Shared by
+    the policy and admission-rule registries."""
+    base, param = spec, None
+    while base not in registry and "_" in base:
+        base, tail = base.rsplit("_", 1)
+        param = tail if param is None else f"{tail}_{param}"
+    return base, param
+
+
+def _no_param(name: str, param: str | None, noun: str = "policy") -> None:
     if param is not None:
-        raise ValueError(f"policy {name!r} takes no parameter, "
+        raise ValueError(f"{noun} {name!r} takes no parameter, "
                          f"got {name}_{param}")
 
 
-def _int_param(name: str, param: str | None, example: str) -> int:
+def _int_param(name: str, param: str | None, example: str,
+               noun: str = "policy") -> int:
     if param is None:
-        raise ValueError(f"policy {name!r} needs an integer parameter, "
+        raise ValueError(f"{noun} {name!r} needs an integer parameter, "
                          f"e.g. {example!r}")
     try:
         value = int(param)
     except ValueError:
-        raise ValueError(f"policy parameter must be an integer, got "
+        raise ValueError(f"{noun} parameter must be an integer, got "
                          f"{name}_{param}") from None
     if value < 1:
-        raise ValueError(f"policy parameter must be >= 1, got {name}_{param}")
+        raise ValueError(f"{noun} parameter must be >= 1, got "
+                         f"{name}_{param}")
     return value
 
 
@@ -579,22 +594,35 @@ class SRTFPolicy(SchedulingPolicy):
         W = state.tables.shape[1] - 1
         # ranking pass, vectorized (this policy is non-static, so allocate
         # re-runs at every event — a per-job Python loop here would be the
-        # slowest path in the engine on 1000-job traces)
-        rows = np.arange(n) if state.rows is None else state.rows
-        tabs = state.tables[rows]
-        feasible = (np.arange(1, W + 1)[None, :]
-                    <= np.minimum(state.max_w, W)[:, None])
-        f_best = np.where(feasible, tabs[:, 1:], 0.0).max(axis=1)
+        # slowest path in the engine on 1000-job traces).  Slicing to the
+        # fleet-wide cap (max_w is 8..16 vs a 64-wide table) and avoiding
+        # the fancy-index row copy cut the 1000-job trace from ~1.0 s to
+        # ~0.5 s; the speed-argmax is precomputed per job and only
+        # re-derived in the loop when the remaining capacity clips it
+        # (clipping drops trailing columns only, so ties still resolve to
+        # the same, earliest, w).
+        tabs = (state.tables[:n] if state.rows is None
+                else state.tables[state.rows])
+        caps = np.minimum(state.max_w, W)
+        wcap = min(int(caps.max()), W) if n else 0
+        if wcap < 1:
+            return target
+        masked = np.where(np.arange(1, wcap + 1)[None, :] <= caps[:, None],
+                          tabs[:, 1:wcap + 1], 0.0)
+        w_star = np.argmax(masked, axis=1) + 1
+        f_best = masked[np.arange(n), w_star - 1]
         t_best = state.remaining / np.maximum(f_best, 1e-12)
+        w_star = w_star.tolist()
         # stable sort: FIFO order breaks remaining-time ties
-        for i in np.argsort(t_best, kind="stable"):
+        for i in np.argsort(t_best, kind="stable").tolist():
             if cap <= 0:
                 break
-            table = state.row_of(i)
-            hi = min(int(state.max_w[i]), cap, W)
+            hi = min(int(caps[i]), cap)
             if hi < 1:
                 continue
-            w = int(np.argmax(table[1:hi + 1])) + 1
+            w = w_star[i]
+            if w > hi:      # clipped by remaining capacity: re-derive
+                w = int(np.argmax(tabs[i, 1:hi + 1])) + 1
             target[i] = w
             cap -= w
         return target
@@ -649,6 +677,30 @@ class UtilityGreedyPolicy(SchedulingPolicy):
         return np.asarray(out, dtype=np.int64)
 
 
+class PackPolicy(SchedulingPolicy):
+    """Placement-aware wrapper (``pack_<policy>``): clamp every job's
+    scale-out cap to the largest node, so gangs never span the slow
+    inter-node fabric — the ≤20-line recipe for making any registered
+    policy topology-aware (the inner policy sees flat speed tables under
+    a placement engine and would otherwise overestimate spanning rings).
+    """
+
+    def __init__(self, inner: SchedulingPolicy):
+        self.inner = inner
+        self.spec = f"pack_{inner.spec}"
+        self.static = inner.static
+        self.explores = inner.explores
+
+    def allocate(self, state, cluster, now):
+        node_cap = max(n.gpus for n in cluster.node_specs())
+        clamped = dataclasses.replace(
+            state, max_w=np.minimum(state.max_w, node_cap))
+        return self.inner.allocate(clamped, cluster, now)
+
+    def validate(self, cluster):
+        self.inner.validate(cluster)
+
+
 def _parameterless(name: str, cls: type[SchedulingPolicy]):
     def factory(param: str | None) -> SchedulingPolicy:
         _no_param(name, param)
@@ -665,3 +717,13 @@ register_policy("fixed",
 register_policy("srtf", _parameterless("srtf", SRTFPolicy))
 register_policy("utility_greedy",
                 _parameterless("utility_greedy", UtilityGreedyPolicy))
+
+
+def _pack_factory(param: str | None) -> SchedulingPolicy:
+    if param is None:
+        raise ValueError("policy 'pack' wraps another policy spec, "
+                         "e.g. 'pack_srtf' or 'pack_precompute'")
+    return PackPolicy(get_policy(param))
+
+
+register_policy("pack", _pack_factory, example="pack_srtf")

@@ -16,6 +16,19 @@ contention penalty (concurrent w>=2 jobs share links and slow each other
 down).  A flat homogeneous ClusterModel — the default built from a bare
 ``capacity`` int — reproduces the paper's setup bit-identically.
 
+With ``ClusterModel(placement=...)`` both engines additionally run the
+node-level placement engine (:mod:`repro.core.placement`): every gang
+gets a concrete per-node assignment from the placement strategy,
+spanning/contention status derives from the *actual* assignment under
+fragmentation (each job's speed is its flat table row times its
+placement factor, tracked in ``place_factor``/``spanning``), the
+migration/defrag pass may consolidate spanning gangs (charging the
+restart freeze), and the admission rule may delay (``delayed`` retry
+list) or reject arrivals (``SimResult.rejected``).  A placement engine
+over a flat cluster is a structural no-op — factors stay exactly 1.0 and
+trajectories are bit-identical to the placement-free path (gated by the
+60-job golden values and the 1000-job sha256 parity tests).
+
 Two engines, one trajectory:
 
   * ``engine="table"`` (default) — the hot path, structure-of-arrays.  The
@@ -80,6 +93,10 @@ class SimResult:
     completion_times: dict[int, float]
     arrival_times: dict[int, float]
     peak_concurrency: int
+    # placement-engine observability (empty/0 on legacy clusters):
+    # arrivals the admission rule turned away, and defrag gang moves
+    rejected: tuple[int, ...] = ()
+    migrations: int = 0
 
     @property
     def avg_jct_hours(self) -> float:
@@ -156,7 +173,8 @@ class _SoAState:
     """
 
     __slots__ = ("n", "ids", "remaining", "w", "frozen", "speed_now",
-                 "explore_started", "max_w", "tables", "index_of")
+                 "explore_started", "max_w", "place_factor", "spanning",
+                 "tables", "index_of")
 
     def __init__(self, table_width: int, cap: int = 16):
         self.n = 0
@@ -167,13 +185,19 @@ class _SoAState:
         self.speed_now = np.zeros(cap)      # tables[i, w[i]] (0 when w == 0)
         self.explore_started = np.full(cap, -np.inf)
         self.max_w = np.zeros(cap, np.int64)
+        # placement-engine rows: speed multiplier over the flat table for
+        # the job's current gang assignment, and its actual spanning flag
+        # (always 1.0 / False on legacy clusters)
+        self.place_factor = np.ones(cap)
+        self.spanning = np.zeros(cap, bool)
         self.tables = np.zeros((cap, table_width))
         self.index_of: dict[int, int] = {}
 
     def _grow(self) -> None:
         cap = 2 * len(self.ids)
         for name in ("ids", "remaining", "w", "frozen", "speed_now",
-                     "explore_started", "max_w"):
+                     "explore_started", "max_w", "place_factor",
+                     "spanning"):
             old = getattr(self, name)
             new = np.zeros(cap, old.dtype)
             new[:self.n] = old[:self.n]
@@ -195,6 +219,8 @@ class _SoAState:
         self.explore_started[i] = (-np.inf if explore_started is None
                                    else explore_started)
         self.max_w[i] = spec.max_w
+        self.place_factor[i] = 1.0
+        self.spanning[i] = False
         self.tables[i, :] = table_row
         self.index_of[spec.job_id] = i
         self.n = i + 1
@@ -205,20 +231,22 @@ class _SoAState:
         idx = np.nonzero(keep)[0]
         m = len(idx)
         for name in ("ids", "remaining", "w", "frozen", "speed_now",
-                     "explore_started", "max_w"):
+                     "explore_started", "max_w", "place_factor",
+                     "spanning"):
             arr = getattr(self, name)
             arr[:m] = arr[:n][idx]
         self.tables[:m] = self.tables[:n][idx]
         self.n = m
         self.index_of = {int(self.ids[i]): i for i in range(m)}
 
-    def view(self) -> sched.AllocView:
+    def view(self, placement=None) -> sched.AllocView:
         """The policy-facing SoA views over the live rows."""
         n = self.n
         return sched.AllocView(remaining=self.remaining[:n],
                                tables=self.tables,
                                max_w=self.max_w[:n],
-                               explore_started=self.explore_started[:n])
+                               explore_started=self.explore_started[:n],
+                               placement=placement)
 
 
 def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
@@ -226,12 +254,18 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
     capacity = cluster.capacity
     restart_cost = cluster.restart_cost
     penalty = cluster.contention_penalty
+    peng = None
+    if cluster.placement is not None:
+        from repro.core.placement import PlacementEngine
+        peng = PlacementEngine(cluster)
     pending = sorted(jobs, key=lambda j: j.arrival)
     n_jobs = len(pending)
     pi = 0                        # next-arrival cursor into `pending`
     st = _SoAState(table_width=capacity + 1)
     done: dict[int, float] = {}
     arrivals = {j.job_id: j.arrival for j in jobs}
+    delayed: list[JobSpec] = []   # admission-delayed, retried every event
+    rejected: list[int] = []
     now = 0.0
     peak = 0
     next_resched = 0.0
@@ -251,25 +285,43 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
             key = st.ids[:n].tobytes()
             if key != static_key:
                 static_key = key
-                static_target = policy.allocate(st.view(), cluster, now)
+                static_target = policy.allocate(
+                    st.view(None if peng is None else peng.view()),
+                    cluster, now)
             target = static_target
         else:
-            target = policy.allocate(st.view(), cluster, now)
+            target = policy.allocate(
+                st.view(None if peng is None else peng.view()),
+                cluster, now)
         changed = np.nonzero(target != st.w[:n])[0]
-        if not len(changed):
-            return
-        st.w[:n] = target
-        st.speed_now[changed] = st.tables[changed, target[changed]]
+        if peng is None:
+            if not len(changed):
+                return
+            st.w[:n] = target
+            st.speed_now[changed] = st.tables[changed, target[changed]]
+            started = changed[target[changed] > 0]
+        else:
+            # placement pass runs even when no target changed: a
+            # completion may have opened a defrag/consolidation move
+            st.w[:n] = target
+            upd, factors, spans = peng.apply(st.ids[:n], target,
+                                             changed.tolist())
+            if not len(upd):
+                return
+            st.place_factor[upd] = factors
+            st.spanning[upd] = spans
+            st.speed_now[upd] = (st.tables[upd, target[upd]]
+                                 * st.place_factor[upd])
+            started = upd[target[upd] > 0]
         until = now + restart_cost
         # batched restart freeze: every job whose allocation changed
         # unfreezes at the same instant, so one heap entry covers them all
         # (the per-job push loop was the last Python loop on this path)
-        started = changed[target[changed] > 0]
         if len(started):
             st.frozen[started] = until
             heapq.heappush(events, (until, _EV_UNFREEZE))
 
-    while pi < n_jobs or st.n:
+    while pi < n_jobs or st.n or delayed:
         # --- next event time -------------------------------------------
         # discard stale static events, then peek the earliest valid one
         while events:
@@ -303,10 +355,14 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
             if penalty:
                 # GADGET-style link sharing: every concurrently-allocated
                 # ring job (w >= 2, frozen or not — it holds its links)
-                # runs at contention_factor(k) of nominal speed
-                fac = cluster.contention_factor(int((w >= 2).sum()))
+                # runs at contention_factor(k) of nominal speed.  Under a
+                # placement engine only *actually node-spanning* rings
+                # contend — they share the inter-node fabric; intra-node
+                # rings never touch it.
+                comm = st.spanning[:n] if peng is not None else (w >= 2)
+                fac = cluster.contention_factor(int(comm.sum()))
                 if fac != 1.0:
-                    speed = np.where(w >= 2, speed * fac, speed)
+                    speed = np.where(comm, speed * fac, speed)
             running = np.nonzero((w > 0) & (frozen <= now)
                                  & (speed > 0.0))[0]
             if len(running):
@@ -333,13 +389,44 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
                 finished = True
                 for i in np.nonzero(fin)[0]:
                     done[int(st.ids[i])] = now
+                    if peng is not None:
+                        peng.release(int(st.ids[i]))
                 st.compact(~fin)
 
         # --- arrivals ----------------------------------------------------
         arrived = False
+        if delayed:
+            # admission-delayed jobs are retried first at every event
+            # (they arrived before anything admitted below)
+            still: list[JobSpec] = []
+            for j in delayed:
+                verdict = peng.admit(j, st.n, len(still), now)
+                if verdict == "admit":
+                    st.add(j, j.speed_table(cluster),
+                           now if policy.explores else None)
+                    peng.register(j)
+                    arrived = True
+                elif verdict == "reject":
+                    rejected.append(j.job_id)
+                else:
+                    still.append(j)
+            if still and not arrived and not st.n and pi == n_jobs:
+                raise RuntimeError(
+                    f"admission rule {cluster.admission!r} stalled: "
+                    f"{len(still)} delayed jobs on an idle cluster")
+            delayed = still
         while pi < n_jobs and pending[pi].arrival <= now + 1e-9:
             j = pending[pi]
             pi += 1
+            if peng is not None:
+                verdict = peng.admit(j, st.n, len(delayed), now)
+                if verdict == "delay":
+                    delayed.append(j)
+                    continue
+                if verdict == "reject":
+                    rejected.append(j.job_id)
+                    continue
+                peng.register(j)
             # the cluster-keyed table row (flat clusters share the int-path
             # cache, so this is the exact seed table); sized to `capacity`,
             # not j.max_w: j.max_w may exceed the cluster (mixed fleets),
@@ -361,7 +448,9 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
             heapq.heappush(events, (next_resched, _EV_RESCHED))
 
     return SimResult(strategy=policy.spec, completion_times=done,
-                     arrival_times=arrivals, peak_concurrency=peak)
+                     arrival_times=arrivals, peak_concurrency=peak,
+                     rejected=tuple(rejected),
+                     migrations=0 if peng is None else peng.migrations)
 
 
 # The paper's Table-3 strategy sweep, plus the registry extensions.

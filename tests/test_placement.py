@@ -1,0 +1,500 @@
+"""Node-level placement engine (PR 4): strategy/admission registries,
+ClusterState invariants (no oversubscription, GPU conservation — both as
+deterministic checks and hypothesis properties), the flat-cluster
+bit-identical no-op gate (60-job golden values + 1000-job sha256 across
+all five workload patterns), engine parity on placement clusters,
+migration/defrag, admission control, heterogeneous per-node hardware,
+and the placement-aware-beats-blind Table-3 acceptance scenario."""
+import dataclasses
+import hashlib
+import json
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.collectives.cost import (ClusterModel, INFINIBAND_100G, NodeSpec)
+from repro.core import placement as P
+from repro.core import scheduler as S
+from repro.core.jobs import (JobSpec, WORKLOAD_PATTERNS, make_workload,
+                             synthetic_workload)
+from repro.core.simulator import simulate
+
+
+# --------------------------------------------------------------------------
+# Registries
+# --------------------------------------------------------------------------
+
+def test_placement_registry_round_trip():
+    assert P.registered_placements() == ("best_fit", "packed", "spread")
+    for name in P.registered_placements():
+        strat = P.get_placement(name)
+        assert isinstance(strat, P.PlacementStrategy)
+        assert strat.name == name
+    with pytest.raises(ValueError, match="unknown placement strategy"):
+        P.get_placement("bogus")
+    with pytest.raises(ValueError, match="already registered"):
+        P.register_placement(P.PackedPlacement)
+
+
+def test_admission_registry_round_trip():
+    assert P.get_admission("admit_all").spec == "admit_all"
+    assert P.get_admission("queue_cap_12").n == 12
+    assert P.get_admission("free_gpus_8").k == 8
+    for bad, match in [("bogus", "unknown admission rule"),
+                       ("queue_cap", "needs an integer"),
+                       ("queue_cap_x", "must be an integer"),
+                       ("free_gpus_0", "must be >= 1"),
+                       ("admit_all_3", "takes no parameter")]:
+        with pytest.raises(ValueError, match=match):
+            P.get_admission(bad)
+
+
+def test_cluster_model_placement_validation():
+    with pytest.raises(ValueError, match="unknown placement strategy"):
+        ClusterModel(placement="bogus")
+    with pytest.raises(ValueError, match="unknown admission rule"):
+        ClusterModel(placement="packed", admission="bogus")
+    with pytest.raises(ValueError, match="admission rule without placement"):
+        ClusterModel(admission="queue_cap_4")
+    with pytest.raises(ValueError, match="defrag without placement"):
+        ClusterModel(defrag=True)
+    with pytest.raises(ValueError, match="nodes without placement"):
+        ClusterModel(capacity=16, nodes=(NodeSpec(16),))
+    with pytest.raises(ValueError, match="not both"):
+        ClusterModel(capacity=16, nodes=(NodeSpec(16),), gpus_per_node=8,
+                     inter_node_beta=1e-9, placement="packed")
+    with pytest.raises(ValueError, match="sum to"):
+        ClusterModel(capacity=64, nodes=(NodeSpec(8),), placement="packed")
+    with pytest.raises(ValueError, match="needs inter_node_beta"):
+        ClusterModel(capacity=16, nodes=(NodeSpec(8), NodeSpec(8)),
+                     placement="packed")
+    with pytest.raises(ValueError, match="can never admit"):
+        ClusterModel(capacity=8, placement="packed",
+                     admission="free_gpus_64")
+    with pytest.raises(ValueError, match="gpus must be >= 1"):
+        NodeSpec(0)
+    # a flat placement cluster is legal and not "flat" (engine runs)
+    assert not ClusterModel(capacity=8, placement="packed").is_flat
+    assert ClusterModel(capacity=8).is_flat
+
+
+def test_node_specs_layouts():
+    assert ClusterModel(capacity=8).node_specs() == (NodeSpec(8),)
+    uniform = ClusterModel(capacity=20, gpus_per_node=8,
+                           inter_node_beta=1e-9).node_specs()
+    assert [n.gpus for n in uniform] == [8, 8, 4]   # last node partial
+    explicit = (NodeSpec(8), NodeSpec(4))
+    assert ClusterModel(capacity=12, nodes=explicit, inter_node_beta=1e-9,
+                        placement="packed").node_specs() == explicit
+
+
+# --------------------------------------------------------------------------
+# Strategies: concrete assignments
+# --------------------------------------------------------------------------
+
+def _state(frees):
+    state = P.ClusterState(tuple(NodeSpec(g) for g in frees))
+    return state
+
+
+def test_packed_prefers_first_whole_fit():
+    state = _state([4, 8, 8])
+    assert P.get_placement("packed").place(state, 6) == ((1, 6),)
+    # nothing fits whole: fill in index order
+    assert P.get_placement("packed").place(state, 18) == ((0, 4), (1, 8),
+                                                          (2, 6))
+
+
+def test_best_fit_is_tightest_then_fewest_nodes():
+    state = _state([8, 6, 8])
+    # tightest single node that fits — not the first
+    assert P.get_placement("best_fit").place(state, 6) == ((1, 6),)
+    # must span: largest free blocks first (fewest nodes)
+    state2 = _state([2, 8, 4])
+    assert P.get_placement("best_fit").place(state2, 12) == ((1, 8), (2, 4))
+
+
+def test_spread_balances_load():
+    state = _state([8, 8])
+    asg = P.get_placement("spread").place(state, 6)
+    assert dict(asg) == {0: 3, 1: 3}
+    # spanning status is derived from the actual split
+    pl = P.Placement(0, asg)
+    assert pl.spans and pl.w == 6
+    assert not P.Placement(1, ((0, 6),)).spans
+
+
+def test_fragmentation_forces_spanning_despite_fitting_capacity():
+    """The point of the subsystem: 8 free GPUs exist but no node has 8,
+    so an 8-gang *actually* spans — the old w > gpus_per_node shortcut
+    (8 > 8 is False) would have called it intra-node."""
+    state = _state([8, 8])
+    state.assign(P.Placement(100, ((0, 4),)))
+    state.assign(P.Placement(101, ((1, 4),)))
+    asg = P.get_placement("best_fit").place(state, 8)
+    assert P.Placement(2, asg).spans
+    state.check_invariants(16)
+
+
+# --------------------------------------------------------------------------
+# ClusterState invariants
+# --------------------------------------------------------------------------
+
+def _exercise_state(strategy_name, node_gpus, gang_sizes):
+    """Drive place/release traffic and check invariants at every step.
+    Each gang places if it fits, and every third placement is released."""
+    nodes = tuple(NodeSpec(g) for g in node_gpus)
+    capacity = sum(node_gpus)
+    state = P.ClusterState(nodes)
+    strat = P.get_placement(strategy_name)
+    live = []
+    for k, w in enumerate(gang_sizes):
+        w = 1 + (w % capacity)
+        if w <= state.total_free():
+            asg = strat.place(state, w)
+            assert sum(g for _, g in asg) == w
+            state.assign(P.Placement(k, asg))
+            live.append(k)
+        elif live and k % 3 == 0:
+            state.release(live.pop(0))
+        state.check_invariants(capacity)
+    for jid in live:
+        state.release(jid)
+    state.check_invariants(capacity)
+    assert state.total_free() == capacity
+
+
+@pytest.mark.parametrize("strategy", ["packed", "spread", "best_fit"])
+def test_no_oversubscription_deterministic(strategy):
+    _exercise_state(strategy, [8, 4, 8, 2], [5, 3, 8, 1, 13, 2, 7, 9, 4,
+                                             22, 1, 1, 6, 12, 3])
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.sampled_from(["packed", "spread", "best_fit"]),
+       st.lists(st.integers(min_value=1, max_value=16), min_size=1,
+                max_size=6),
+       st.lists(st.integers(min_value=0, max_value=63), min_size=1,
+                max_size=40))
+def test_no_oversubscription_property(strategy, node_gpus, gang_sizes):
+    """Hypothesis: under arbitrary place/release traffic no node is ever
+    oversubscribed and granted GPUs are conserved, for every registered
+    placement strategy."""
+    _exercise_state(strategy, node_gpus, gang_sizes)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+       st.sampled_from(["packed", "spread", "best_fit"]))
+def test_engine_conserves_gpus_across_events(seed, strategy):
+    """Hypothesis: across a whole simulated trace on a fragmented cluster
+    the placement engine's books always balance (checked at completion:
+    everything released, free == capacity) and every job completes."""
+    cluster = ClusterModel(capacity=32, gpus_per_node=8,
+                           inter_node_beta=1.0 / 1.25e8,
+                           placement=strategy, defrag=True)
+    jobs = make_workload("mixed_maxw", 12, 300.0, seed)
+    res = simulate(jobs, strategy="precompute", cluster=cluster)
+    assert len(res.completion_times) == 12
+    assert not res.rejected
+
+
+# --------------------------------------------------------------------------
+# Flat no-op gate: golden values + sha256
+# --------------------------------------------------------------------------
+
+# avg JCT (hours) on synthetic_workload(60, 500.0, 0), capacity 64 — the
+# pre-placement-engine values (tests/test_policies.py holds the same
+# numbers for the plain flat cluster; the placement engine must reproduce
+# them with the engine *active*).
+GOLDEN_60JOB_JCT_HOURS = {
+    "precompute": 1.871922560745595,
+    "exploratory": 2.1010226326262185,
+    "fixed_8": 2.0074955131017864,
+    "srtf": 1.9517217772627014,
+}
+
+# sha256 of the sorted (job_id, completion_time) pairs of 1000-job
+# precompute traces, capacity 64 — computed on main @ PR 3 (pre-placement)
+# and frozen here: both the plain flat cluster and the flat cluster with
+# the placement engine active must reproduce them bit-for-bit.
+GOLDEN_1000JOB_SHA256 = {
+    "bursty":
+        "e214359fc3cb8d073c5b4e17f836ef652ab4b93a5a0ba130dba8a03950ff0302",
+    "diurnal":
+        "f38a4f3913b32c63193607be949be7743673249ac1dcd0b6d1b67763cdea708d",
+    "heavy_tailed":
+        "d7fed4c063aefcbda0323970f30265346627d035e0196f16687d1294c1cbbf8c",
+    "mixed_maxw":
+        "f38507e473d79f3e451a44ad1b3c9a8e9cf0985ed33e0b5d83a3f632f23dc0b6",
+    "poisson":
+        "68b1290f6eb5876e2d45c48fd4eb4f7653468b2eacd9acf6a46ce3eb0571dd25",
+}
+
+FLAT_PLACED = ClusterModel(capacity=64, placement="packed")
+
+
+@pytest.fixture(scope="module")
+def trace60():
+    return synthetic_workload(60, 500.0, 0)
+
+
+@pytest.mark.parametrize("strat", sorted(GOLDEN_60JOB_JCT_HOURS))
+def test_flat_placement_preserves_60job_golden_values(trace60, strat):
+    res = simulate(trace60, strategy=strat, cluster=FLAT_PLACED)
+    assert res.avg_jct_hours == GOLDEN_60JOB_JCT_HOURS[strat], strat
+    assert res.migrations == 0 and res.rejected == ()
+
+
+def test_flat_placement_is_noop_for_every_registered_policy(trace60):
+    """Every registry entry (including future ones): the placement engine
+    on a flat cluster must be a bit-identical no-op, both engines."""
+    for strat in S.registered_policies().values():
+        plain = simulate(trace60, 64, strat)
+        placed = simulate(trace60, strategy=strat, cluster=FLAT_PLACED)
+        assert plain.completion_times == placed.completion_times, strat
+        ref = simulate(trace60, strategy=strat, cluster=FLAT_PLACED,
+                       engine="reference")
+        assert placed.completion_times == ref.completion_times, strat
+
+
+def _trace_sha256(res) -> str:
+    payload = json.dumps(sorted(res.completion_times.items())).encode()
+    return hashlib.sha256(payload).hexdigest()
+
+
+@pytest.mark.parametrize("pattern", sorted(WORKLOAD_PATTERNS))
+def test_1000job_sha256_parity_with_and_without_placement(pattern):
+    want = GOLDEN_1000JOB_SHA256[pattern]
+    jobs = make_workload(pattern, 1000, 250.0, 0)
+    assert _trace_sha256(simulate(jobs, 64, "precompute")) == want, pattern
+    placed = simulate(jobs, strategy="precompute", cluster=FLAT_PLACED)
+    assert _trace_sha256(placed) == want, f"{pattern} with placement engine"
+
+
+# --------------------------------------------------------------------------
+# Placement clusters: engine parity, factors, defrag, admission
+# --------------------------------------------------------------------------
+
+FRAG = ClusterModel(capacity=32, gpus_per_node=8,
+                    inter_node_beta=1.0 / 1.25e8,
+                    contention_penalty=0.05,
+                    placement="best_fit", defrag=True)
+
+
+def test_placement_cluster_engine_parity_every_policy():
+    jobs = make_workload("mixed_maxw", 20, 500.0, 7)
+    for strat in S.registered_policies().values():
+        fast = simulate(jobs, strategy=strat, cluster=FRAG)
+        ref = simulate(jobs, strategy=strat, cluster=FRAG,
+                       engine="reference")
+        assert fast.completion_times == ref.completion_times, strat
+        assert fast.migrations == ref.migrations, strat
+
+
+def test_spanning_gang_pays_the_cross_node_factor():
+    """Two w=8 gangs on 8-GPU nodes run intra-node; a w=16 gang must span
+    and finishes later than the flat table predicts."""
+    flat = ClusterModel(capacity=16)
+    placed = ClusterModel(capacity=16, gpus_per_node=8,
+                          inter_node_beta=1.0 / 1.25e8, placement="packed")
+    one = [JobSpec(job_id=0, arrival=0.0, epochs=100.0, max_w=16)]
+    t_flat = simulate(one, strategy="fixed_16", cluster=flat)
+    t_span = simulate(one, strategy="fixed_16", cluster=placed)
+    assert (t_span.completion_times[0] > t_flat.completion_times[0] * 1.2)
+    # the same job as two node-sized gangs pays nothing
+    intra = simulate([JobSpec(job_id=0, arrival=0.0, epochs=100.0)],
+                     strategy="fixed_8", cluster=placed)
+    intra_flat = simulate([JobSpec(job_id=0, arrival=0.0, epochs=100.0)],
+                          strategy="fixed_8", cluster=flat)
+    assert intra.completion_times == intra_flat.completion_times
+
+
+def test_placement_factor_matches_legacy_spanning_scale():
+    """The per-assignment factor times the flat table reproduces the
+    legacy baked-in spanning row exactly (same analytic ratio)."""
+    job = JobSpec(job_id=0, arrival=0.0, epochs=100.0, max_w=16)
+    legacy = ClusterModel(capacity=16, gpus_per_node=8,
+                          inter_node_beta=1.0 / 1.25e8)
+    flat_tab = job.speed_table(16)
+    legacy_tab = job.speed_table(legacy)
+    factor = job.placement_factor(legacy, legacy.inter_hw())
+    w = np.arange(9, 17)
+    assert np.array_equal(flat_tab[w] * factor[w], legacy_tab[w])
+
+
+def test_defrag_consolidates_and_charges_restart():
+    """A gang left spanning by fragmentation is migrated to a single node
+    once space frees up; the move is counted and the trace with defrag
+    beats the one without."""
+    on = simulate(make_workload("mixed_maxw", 20, 400.0, 5),
+                  strategy="precompute", cluster=FRAG)
+    off = simulate(make_workload("mixed_maxw", 20, 400.0, 5),
+                   strategy="precompute",
+                   cluster=dataclasses.replace(FRAG, defrag=False))
+    assert on.migrations > 0
+    assert off.migrations == 0
+    assert on.avg_jct_hours < off.avg_jct_hours
+
+
+def test_defrag_never_migrates_to_slower_node():
+    """Consolidation must strictly beat the current placement factor: a
+    heterogeneous fleet can free up a node so slow that staying spanned
+    across fast nodes is faster — paying restart_cost to get slower is
+    never a defrag."""
+    ancient = dataclasses.replace(INFINIBAND_100G, gamma=1000.0 / 50e9,
+                                  name="ancient")
+    hetero = ClusterModel(capacity=16,
+                          nodes=(NodeSpec(4), NodeSpec(4),
+                                 NodeSpec(8, hw=ancient)),
+                          inter_node_beta=1.0 / 1.25e9,
+                          placement="packed", defrag=True)
+    spec = JobSpec(job_id=0, arrival=0.0, epochs=10.0, max_w=16)
+    eng = P.PlacementEngine(hetero)
+    eng.register(spec)
+    eng.state.assign(P.Placement(0, ((0, 3), (1, 3))))
+    eng.apply([0], [6], [])
+    assert eng.migrations == 0          # the slow node fits but is slower
+    assert eng.state.placements[0].assignment == ((0, 3), (1, 3))
+    # homogeneous twin: the same gang does consolidate
+    homog = ClusterModel(capacity=16,
+                         nodes=(NodeSpec(4), NodeSpec(4), NodeSpec(8)),
+                         inter_node_beta=1.0 / 1.25e9,
+                         placement="packed", defrag=True)
+    eng2 = P.PlacementEngine(homog)
+    eng2.register(spec)
+    eng2.state.assign(P.Placement(0, ((0, 3), (1, 3))))
+    eng2.apply([0], [6], [])
+    assert eng2.migrations == 1
+    assert eng2.state.placements[0].assignment == ((2, 6),)
+
+
+def test_queue_cap_rejects_and_records():
+    adm = ClusterModel(capacity=16, placement="packed",
+                       admission="queue_cap_4")
+    jobs = make_workload("bursty", 30, 100.0, 1)
+    res = simulate(jobs, strategy="precompute", cluster=adm)
+    ref = simulate(jobs, strategy="precompute", cluster=adm,
+                   engine="reference")
+    assert res.rejected == ref.rejected
+    assert len(res.rejected) > 0
+    assert len(res.completion_times) + len(res.rejected) == 30
+    assert set(res.rejected).isdisjoint(res.completion_times)
+    assert res.peak_concurrency <= 4
+
+
+def test_free_gpus_delays_but_completes_everything():
+    adm = ClusterModel(capacity=16, placement="packed",
+                       admission="free_gpus_8")
+    jobs = make_workload("bursty", 30, 100.0, 1)
+    res = simulate(jobs, strategy="precompute", cluster=adm)
+    ref = simulate(jobs, strategy="precompute", cluster=adm,
+                   engine="reference")
+    assert res.completion_times == ref.completion_times
+    assert len(res.completion_times) == 30 and res.rejected == ()
+    # backpressure means strictly fewer concurrent jobs than admit-all
+    free = simulate(jobs, strategy="precompute",
+                    cluster=ClusterModel(capacity=16, placement="packed"))
+    assert res.peak_concurrency <= free.peak_concurrency
+
+
+def test_heterogeneous_nodes_slow_gangs_on_old_hosts():
+    """A job packed onto a quarter-speed node finishes later than one on
+    a current-gen node; node order is the packed preference order."""
+    slow_hw = dataclasses.replace(INFINIBAND_100G, beta=4.0 / 12.5e9,
+                                  gamma=4.0 / 50e9, name="ib_25g_class")
+    fast_first = ClusterModel(
+        capacity=16, nodes=(NodeSpec(8), NodeSpec(8, hw=slow_hw)),
+        inter_node_beta=1.0 / 1.25e8, placement="packed")
+    slow_first = ClusterModel(
+        capacity=16, nodes=(NodeSpec(8, hw=slow_hw), NodeSpec(8)),
+        inter_node_beta=1.0 / 1.25e8, placement="packed")
+    one = [JobSpec(job_id=0, arrival=0.0, epochs=100.0)]
+    t_fast = simulate(one, strategy="fixed_8", cluster=fast_first)
+    t_slow = simulate(one, strategy="fixed_8", cluster=slow_first)
+    assert t_slow.completion_times[0] > t_fast.completion_times[0]
+    # parity on the heterogeneous fleet too
+    jobs = make_workload("poisson", 15, 400.0, 2)
+    for cl in (fast_first, slow_first):
+        fast = simulate(jobs, strategy="precompute", cluster=cl)
+        ref = simulate(jobs, strategy="precompute", cluster=cl,
+                       engine="reference")
+        assert fast.completion_times == ref.completion_times
+
+
+# --------------------------------------------------------------------------
+# Placement-aware policies (pack_*) and the Table-3 acceptance scenario
+# --------------------------------------------------------------------------
+
+def test_pack_policy_spec_parsing():
+    assert S.get_policy("pack_srtf").spec == "pack_srtf"
+    assert S.get_policy("pack_precompute").spec == "pack_precompute"
+    # longest-prefix parsing handles multi-underscore inner specs
+    assert S.get_policy("pack_utility_greedy").spec == "pack_utility_greedy"
+    assert S.get_policy("pack_fixed_8").spec == "pack_fixed_8"
+    with pytest.raises(ValueError, match="wraps another policy"):
+        S.get_policy("pack")
+    with pytest.raises(ValueError, match="unknown scheduling policy"):
+        S.get_policy("pack_bogus")
+
+
+def test_pack_policy_clamps_to_largest_node():
+    jobs = [JobSpec(job_id=j, arrival=0.0, epochs=150.0, max_w=16)
+            for j in range(2)]
+    tables = np.stack([s.speed_table(32) for s in jobs])
+    view = S.AllocView(remaining=np.array([150.0, 150.0]), tables=tables,
+                       max_w=np.array([16, 16], np.int64),
+                       explore_started=np.full(2, -np.inf))
+    cluster = ClusterModel(capacity=32, gpus_per_node=8,
+                           inter_node_beta=1.0 / 1.25e8,
+                           placement="packed")
+    target = S.get_policy("pack_srtf").allocate(view, cluster, 0.0)
+    assert (target <= 8).all()
+    # on a flat cluster the clamp is the capacity: identical to inner
+    flat = ClusterModel(capacity=32)
+    a = S.get_policy("pack_srtf").allocate(view, flat, 0.0)
+    b = S.get_policy("srtf").allocate(view, flat, 0.0)
+    assert np.array_equal(a, b)
+
+
+def test_alloc_view_carries_placement_snapshot():
+    """Policies see per-node free GPUs under a placement engine (the hook
+    placement-aware strategies build on)."""
+    seen = {}
+
+    class Probe(S.SchedulingPolicy):
+        spec = "probe"
+
+        def allocate(self, state, cluster, now):
+            if state.placement is not None:
+                seen["free"] = state.placement.free.copy()
+                seen["node_gpus"] = state.placement.node_gpus
+                seen["strategy"] = state.placement.strategy
+            return np.ones(state.n, np.int64)
+
+    jobs = [JobSpec(job_id=0, arrival=0.0, epochs=1.0)]
+    cluster = ClusterModel(capacity=16, gpus_per_node=8,
+                           inter_node_beta=1.0 / 1.25e8,
+                           placement="best_fit")
+    simulate(jobs, strategy=Probe(), cluster=cluster)
+    assert seen["strategy"] == "best_fit"
+    assert seen["node_gpus"].tolist() == [8, 8]
+    assert seen["free"].tolist() == [8, 8]       # snapshot before placing
+
+
+def test_placement_aware_beats_blind_on_fragmented_scenario():
+    """The PR-4 acceptance row: on the fragmented Table-3 placement
+    scenario a placement-aware strategy beats the placement-blind
+    baseline by a wide margin."""
+    from benchmarks.table3_scheduler_sim import (FRAGMENTED,
+                                                 HETEROGENEOUS)
+    jobs = make_workload("mixed_maxw", 60, 500.0, 0)
+    for cluster in (FRAGMENTED, HETEROGENEOUS):
+        blind = simulate(jobs, strategy="srtf", cluster=cluster)
+        aware = simulate(jobs, strategy="pack_srtf", cluster=cluster)
+        assert aware.avg_jct_hours < blind.avg_jct_hours, cluster.placement
+    frag = {s: simulate(jobs, strategy=s, cluster=FRAGMENTED).avg_jct_hours
+            for s in ("precompute", "pack_precompute")}
+    assert frag["pack_precompute"] < frag["precompute"]
