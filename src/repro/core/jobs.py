@@ -12,6 +12,13 @@ import numpy as np
 
 from repro.collectives import cost as cost_lib
 
+# Interned speed/factor rows, shared across JobSpec instances whose
+# speed-determining fields agree (see ``JobSpec._table_key``).  Distinct
+# parameter sets are few (hardware presets x cluster shapes), so the
+# cache stays tiny even across 100k-job traces; entries are read-only
+# arrays whose object identity doubles as the simulator's row id.
+_TABLE_INTERN: dict[tuple, np.ndarray] = {}
+
 
 @dataclasses.dataclass
 class JobSpec:
@@ -81,8 +88,13 @@ class JobSpec:
         range(max_w + 1)]`` but built with one vectorized pass instead of
         one feature-matrix construction per call — the fix for the seed
         profile where 169k scalar ``speed`` calls burned >90% of
-        simulation wall time.  Returned arrays are cached and read-only;
-        don't mutate JobSpec fields after the first call.
+        simulation wall time.  Returned arrays are cached, read-only and
+        *interned*: jobs whose speed-determining fields agree (everything
+        but ``job_id``/``arrival``/``epochs``/``max_w``) share one array
+        object, so a 10k-job fleet of identical hardware builds one table
+        row instead of 10k and the simulator can collapse its per-job
+        table matrix to the handful of distinct rows (keyed by object
+        identity).  Don't mutate JobSpec fields after the first call.
         """
         if isinstance(cluster, cost_lib.ClusterModel):
             if cluster.gpus_per_node is None or cluster.placement is not None:
@@ -95,19 +107,37 @@ class JobSpec:
         cache = self.__dict__.setdefault("_speed_tables", {})
         tab = cache.get(max_w)
         if tab is None:
-            tab = self._build_speed_table(max_w)
-            tab.flags.writeable = False
+            key = self._table_key(max_w)
+            tab = _TABLE_INTERN.get(key)
+            if tab is None:
+                tab = self._build_speed_table(max_w)
+                tab.flags.writeable = False
+                _TABLE_INTERN[key] = tab
             cache[max_w] = tab
         return tab
+
+    def _table_key(self, tail) -> tuple:
+        """Interning key: every field the speed curve depends on (NOT
+        job_id/arrival/epochs/max_w — tables are built to a caller-chosen
+        width, so per-job caps never enter the values) plus the
+        width/cluster tail."""
+        return (self.speed_mode, self.dataset, self.m, self.n_bytes,
+                self.T_fwd, self.T_back, self.T_const, self.T_per_worker,
+                self.hw, tail)
 
     def _cluster_speed_table(self, cluster) -> np.ndarray:
         """Topology-aware speed table: flat base speeds, with rows whose
         ring spans nodes (w > gpus_per_node) scaled by the analytic
         intra/inter step-time ratio (same m/T_fwd/T_back/n_bytes, β
         swapped for ``cluster.inter_node_beta``).  Cached per cluster —
-        ClusterModel is frozen/hashable."""
+        ClusterModel is frozen/hashable — and interned across jobs like
+        the flat rows."""
         cache = self.__dict__.setdefault("_speed_tables", {})
         tab = cache.get(cluster)
+        if tab is not None:
+            return tab
+        key = self._table_key(cluster)
+        tab = _TABLE_INTERN.get(key)
         if tab is None:
             tab = self.speed_table(cluster.capacity).copy()
             ws = np.arange(len(tab), dtype=float)
@@ -122,7 +152,8 @@ class JobSpec:
                     cluster.inter_hw())
                 tab[span] *= t_intra / t_inter
             tab.flags.writeable = False
-            cache[cluster] = tab
+            _TABLE_INTERN[key] = tab
+        cache[cluster] = tab
         return tab
 
     def placement_factor(self, cluster, hw_eff) -> np.ndarray:
@@ -138,6 +169,12 @@ class JobSpec:
         # different baseline coefficients must not share factor tables
         key = (cluster.capacity, cluster.hw, hw_eff)
         tab = cache.get(key)
+        if tab is not None:
+            return tab
+        # factor curves depend only on the communication fields, so they
+        # intern across jobs like the speed tables
+        gkey = (self.m, self.T_fwd, self.T_back, self.n_bytes) + key
+        tab = _TABLE_INTERN.get(gkey)
         if tab is None:
             ws = np.arange(1, cluster.capacity + 1, dtype=float)
             t_base = cost_lib.step_time_table(self.m, self.T_fwd,
@@ -149,7 +186,8 @@ class JobSpec:
             tab = np.ones(cluster.capacity + 1)
             tab[1:] = t_base / t_eff
             tab.flags.writeable = False
-            cache[key] = tab
+            _TABLE_INTERN[gkey] = tab
+        cache[key] = tab
         return tab
 
     def _build_speed_table(self, max_w: int) -> np.ndarray:

@@ -31,21 +31,32 @@ trajectories are bit-identical to the placement-free path (gated by the
 
 Two engines, one trajectory:
 
-  * ``engine="table"`` (default) — the hot path, structure-of-arrays.  The
-    active set lives in ``_SoAState``: numpy ``remaining`` / ``w`` /
-    ``frozen`` / ``speed_now`` arrays plus a 2-D speed-table matrix, all in
+  * ``engine="table"`` (default) — the hot path, structure-of-arrays with
+    cross-tick incremental state.  The active set lives in ``_SoAState``:
+    numpy ``remaining`` / ``w`` / ``frozen`` / ``speed_now`` arrays in
     reference active-list order (order is load-bearing for tie-breaks and
-    FIFO grants), maintained incrementally — rows append on arrival
-    (doubling growth) and compact in place on completion, never rebuilt per
-    tick.  Each job's speed curve is sampled once into a table row at
-    admission (``JobSpec.speed_table`` is bit-identical to per-scalar
-    ``speed`` calls), allocation is one ``policy.allocate`` call over the
-    SoA views (:class:`scheduler.AllocView`), the per-event
-    completion-estimate scan and progress advance are vectorized slices,
-    deterministic events (reschedule ticks, restart-freeze expiries) live
-    in a heapq with lazy invalidation, and the next arrival is an index
-    into the time-sorted job list.  This is what makes 1000-job traces
-    finish in well under a second per strategy.
+    FIFO grants) occupying a sliding window of doubling-growth arrays —
+    head completions advance the window in O(1), interior ones shift the
+    shorter side.  Speed tables are *interned*: jobs with identical
+    speed-determining parameters share one row of a distinct-rows matrix
+    through a ``rows`` indirection (``JobSpec.speed_table`` returns
+    shared cached arrays, bit-identical to per-scalar ``speed`` calls),
+    so a homogeneous 10k-job fleet stores one row, not a 10k-row matrix
+    recopied per completion.  Allocation is one ``policy.allocate`` call
+    over the SoA views (:class:`scheduler.AllocView`) carrying the
+    :class:`scheduler.IncrementalContext` — the admission-seq spine the
+    persistent gain-heaps hang solver state off between ticks, so a
+    reallocation costs O(changed jobs), not O(active jobs).  Per-event
+    scans (completion estimates, progress advance, unfreeze validation,
+    contention counts) touch only the dirty slice: the <= capacity rows
+    holding workers, tracked incrementally, plus rows admitted since the
+    last scan — a saturated 100k-job backlog costs events nothing.
+    Deterministic events (reschedule ticks, restart-freeze expiries)
+    live in a bucketed calendar queue (``_CalendarQueue``, heap-order
+    identical, O(1) amortized for this dense near-future stream), and
+    the next arrival is an index into the time-sorted job list.  This is
+    what makes 1000-job traces finish in well under a second and
+    10k–100k-job traces first-class (seconds to ~a minute per strategy).
     Completion estimates are deliberately *recomputed* each event: the
     trajectory ``remaining -= dt * speed`` re-derives the completion time
     from the current (now, remaining) pair at every event, so a cached
@@ -67,8 +78,8 @@ old all-or-nothing 8/0 grant, which starved later explorers outright).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
-import heapq
 
 import numpy as np
 
@@ -156,9 +167,65 @@ def simulate(jobs: list[JobSpec], capacity: int | None = None,
     raise ValueError(f"unknown engine {engine!r}")
 
 
-# Event kinds in the fast engine's static-event heap.
+# Event kinds in the fast engine's static-event queue.
 _EV_RESCHED = 0
 _EV_UNFREEZE = 1
+
+
+class _CalendarQueue:
+    """Bucketed calendar queue for the fast engine's static events.
+
+    Reschedule ticks and restart-unfreeze expiries form a dense,
+    near-future, almost-monotone stream: every event lands within
+    ``RESCHEDULE_EVERY`` (or ``restart_cost``) of the current time, so a
+    calendar of ``width``-second buckets pops in O(1) amortized where a
+    binary heap pays O(log pending) and comparison overhead per stale
+    entry.  Pop order is identical to ``heapq`` over ``(t, kind)``
+    tuples: buckets partition time monotonically and each bucket keeps
+    its (few) entries ``bisect``-sorted by the same key, so the head of
+    the first non-empty bucket *is* the global lexicographic minimum.
+    The cursor only moves forward except when a push lands behind it
+    (an unfreeze scheduled while the cursor sits on a far-future
+    reschedule tick), which resets it to that bucket.
+    """
+
+    __slots__ = ("width", "buckets", "cursor", "n")
+
+    def __init__(self, width: float):
+        self.width = width
+        self.buckets: dict[int, list[tuple[float, int]]] = {}
+        self.cursor = 0
+        self.n = 0
+
+    def push(self, t: float, kind: int) -> None:
+        b = int(t / self.width)
+        lst = self.buckets.get(b)
+        if lst is None:
+            self.buckets[b] = [(t, kind)]
+        else:
+            bisect.insort(lst, (t, kind))
+        if b < self.cursor or not self.n:
+            self.cursor = b
+        self.n += 1
+
+    def peek(self) -> tuple[float, int] | None:
+        if not self.n:
+            return None
+        while True:
+            lst = self.buckets.get(self.cursor)
+            if lst:
+                return lst[0]
+            self.cursor += 1
+
+    def pop(self) -> tuple[float, int]:
+        head = self.peek()
+        assert head is not None, "pop from an empty calendar queue"
+        lst = self.buckets[self.cursor]
+        lst.pop(0)
+        if not lst:
+            del self.buckets[self.cursor]
+        self.n -= 1
+        return head
 
 
 class _SoAState:
@@ -167,22 +234,42 @@ class _SoAState:
     One row per active job, in the same order the reference engine keeps
     its ``active`` list (arrival order with in-place removals) — the order
     is load-bearing: solver tie-breaks, FIFO fixed grants and explore-gang
-    grants all key off it.  Arrays grow by doubling on arrival and compact
-    in place on completion, so per-event work is vectorized slices instead
-    of rebuilt per-job tuples.
+    grants all key off it.
+
+    The live rows occupy the window ``[start, start + n)`` of arrays that
+    grow by doubling.  A completion removes its row by shifting whichever
+    side of the window is *shorter* (head completions — the common case
+    under FIFO-ish service — just advance ``start``), so removal costs
+    O(min(side)) instead of the full O(n x row-width) matrix copy the
+    10k-job traces used to pay per completion.
+
+    Speed tables are *interned*: ``rows[i]`` indexes job i's row in a
+    matrix holding only the distinct tables of the fleet (keyed by the
+    object identity of the cached ``JobSpec.speed_table`` array), so a
+    10k-job homogeneous trace stores one 65-float row, not a 10k x 65
+    matrix that must be copied on every completion.
+
+    ``seq`` carries each job's admission number (strictly increasing in
+    window order) and ``pos_of_seq`` maps it back to the absolute row
+    (-1 once the job is gone) — the spine the cross-tick solver state in
+    :mod:`repro.core.scheduler` hangs off.
     """
 
-    __slots__ = ("n", "ids", "remaining", "w", "frozen", "speed_now",
-                 "explore_started", "max_w", "place_factor", "spanning",
-                 "tables", "index_of")
+    _ARRAYS = ("ids", "remaining", "w", "frozen", "speed_now",
+               "explore_started", "max_w", "place_factor", "spanning",
+               "seq", "rows")
+
+    __slots__ = _ARRAYS + ("n", "start", "tables", "n_rows", "pos_of_seq",
+                           "admitted", "_row_ids", "_row_pin", "ctx")
 
     def __init__(self, table_width: int, cap: int = 16):
         self.n = 0
+        self.start = 0
         self.ids = np.zeros(cap, np.int64)
         self.remaining = np.zeros(cap)
         self.w = np.zeros(cap, np.int64)
         self.frozen = np.zeros(cap)
-        self.speed_now = np.zeros(cap)      # tables[i, w[i]] (0 when w == 0)
+        self.speed_now = np.zeros(cap)      # table[w[i]] (0 when w == 0)
         self.explore_started = np.full(cap, -np.inf)
         self.max_w = np.zeros(cap, np.int64)
         # placement-engine rows: speed multiplier over the flat table for
@@ -190,27 +277,51 @@ class _SoAState:
         # (always 1.0 / False on legacy clusters)
         self.place_factor = np.ones(cap)
         self.spanning = np.zeros(cap, bool)
-        self.tables = np.zeros((cap, table_width))
-        self.index_of: dict[int, int] = {}
+        self.seq = np.zeros(cap, np.int64)
+        self.rows = np.zeros(cap, np.int64)
+        self.tables = np.zeros((4, table_width))
+        self.n_rows = 0
+        self.pos_of_seq = np.full(cap, -1, np.int64)
+        self.admitted = 0
+        self._row_ids: dict[int, int] = {}
+        self._row_pin: list[np.ndarray] = []    # keeps id() keys alive
+        self.ctx = sched.IncrementalContext()
 
-    def _grow(self) -> None:
+    def _make_room(self) -> None:
+        """The window hit the right edge: double the arrays *in place*
+        (positions preserved — the engine holds absolute row indices
+        across admissions, so the window never slides back; the dead head
+        space is bounded by total admissions, a few MB at 100k jobs)."""
         cap = 2 * len(self.ids)
-        for name in ("ids", "remaining", "w", "frozen", "speed_now",
-                     "explore_started", "max_w", "place_factor",
-                     "spanning"):
+        s, n = self.start, self.n
+        for name in self._ARRAYS:
             old = getattr(self, name)
             new = np.zeros(cap, old.dtype)
-            new[:self.n] = old[:self.n]
+            new[s:s + n] = old[s:s + n]
             setattr(self, name, new)
-        tables = np.zeros((cap, self.tables.shape[1]))
-        tables[:self.n] = self.tables[:self.n]
-        self.tables = tables
+
+    def _row_id(self, table_row: np.ndarray) -> int:
+        """Interned row index for a speed-table array (object identity —
+        ``JobSpec.speed_table`` returns shared cached arrays)."""
+        rid = self._row_ids.get(id(table_row))
+        if rid is None:
+            rid = self.n_rows
+            if rid == len(self.tables):
+                tables = np.zeros((2 * rid, self.tables.shape[1]))
+                tables[:rid] = self.tables
+                self.tables = tables
+            self.tables[rid, :] = table_row
+            self._row_ids[id(table_row)] = rid
+            self._row_pin.append(table_row)
+            self.n_rows = rid + 1
+        return rid
 
     def add(self, spec: JobSpec, table_row: np.ndarray,
-            explore_started: float | None) -> None:
-        i = self.n
+            explore_started: float | None) -> int:
+        i = self.start + self.n
         if i == len(self.ids):
-            self._grow()
+            self._make_room()
+            i = self.start + self.n
         self.ids[i] = spec.job_id
         self.remaining[i] = spec.epochs
         self.w[i] = 0
@@ -221,31 +332,68 @@ class _SoAState:
         self.max_w[i] = spec.max_w
         self.place_factor[i] = 1.0
         self.spanning[i] = False
-        self.tables[i, :] = table_row
-        self.index_of[spec.job_id] = i
-        self.n = i + 1
+        self.rows[i] = self._row_id(table_row)
+        s = self.admitted
+        if s == len(self.pos_of_seq):
+            pos = np.full(2 * s, -1, np.int64)
+            pos[:s] = self.pos_of_seq
+            self.pos_of_seq = pos
+        self.seq[i] = s
+        self.pos_of_seq[s] = i
+        self.admitted = s + 1
+        self.n += 1
+        return i
 
-    def compact(self, keep: np.ndarray) -> None:
-        """Drop rows where ``keep`` is False, preserving relative order."""
-        n = self.n
-        idx = np.nonzero(keep)[0]
-        m = len(idx)
-        for name in ("ids", "remaining", "w", "frozen", "speed_now",
-                     "explore_started", "max_w", "place_factor",
-                     "spanning"):
+    def remove(self, gone: list[int]) -> None:
+        """Drop the rows at absolute positions ``gone`` (ascending),
+        preserving relative order, by shifting the shorter side."""
+        s, n = self.start, self.n
+        k = len(gone)
+        self.pos_of_seq[self.seq[gone]] = -1
+        if gone[-1] - gone[0] == k - 1 and gone[0] == s:
+            # contiguous head block: just advance the window
+            self.start = s + k
+            self.n = n - k
+            return
+        if k == 1:
+            p = gone[0]
+            if p - s <= s + n - 1 - p:      # head side shorter: shift right
+                for name in self._ARRAYS:
+                    arr = getattr(self, name)
+                    arr[s + 1:p + 1] = arr[s:p]
+                self.pos_of_seq[self.seq[s + 1:p + 1]] += 1
+                self.start = s + 1
+            else:                           # tail side shorter: shift left
+                for name in self._ARRAYS:
+                    arr = getattr(self, name)
+                    arr[p:s + n - 1] = arr[p + 1:s + n]
+                self.pos_of_seq[self.seq[p:s + n - 1]] -= 1
+            self.n = n - 1
+            return
+        keep = np.ones(n, bool)
+        keep[np.asarray(gone, np.int64) - s] = False
+        kidx = np.nonzero(keep)[0] + s
+        m = len(kidx)
+        for name in self._ARRAYS:
             arr = getattr(self, name)
-            arr[:m] = arr[:n][idx]
-        self.tables[:m] = self.tables[:n][idx]
+            arr[s:s + m] = arr[kidx]
+        self.pos_of_seq[self.seq[s:s + m]] = np.arange(s, s + m)
         self.n = m
-        self.index_of = {int(self.ids[i]): i for i in range(m)}
 
     def view(self, placement=None) -> sched.AllocView:
-        """The policy-facing SoA views over the live rows."""
-        n = self.n
-        return sched.AllocView(remaining=self.remaining[:n],
-                               tables=self.tables,
-                               max_w=self.max_w[:n],
-                               explore_started=self.explore_started[:n],
+        """The policy-facing SoA views over the live window, with the
+        refreshed incremental context attached."""
+        s, n = self.start, self.n
+        ctx = self.ctx
+        ctx.pos_of_seq = self.pos_of_seq
+        ctx.start = s
+        return sched.AllocView(remaining=self.remaining[s:s + n],
+                               tables=self.tables[:self.n_rows],
+                               max_w=self.max_w[s:s + n],
+                               explore_started=self.explore_started[s:s + n],
+                               rows=self.rows[s:s + n],
+                               seq=self.seq[s:s + n],
+                               inc=ctx,
                                placement=placement)
 
 
@@ -269,20 +417,44 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
     now = 0.0
     peak = 0
     next_resched = 0.0
-    static_key: bytes | None = None
+    static_key: tuple | None = None
     static_target: np.ndarray | None = None
-    # Static-event queue: reschedule ticks and restart-freeze expiries, with
-    # lazy invalidation (stale entries are discarded at peek time).
-    events: list[tuple[float, int]] = [(0.0, _EV_RESCHED)]
+    # Static-event queue: reschedule ticks and restart-freeze expiries,
+    # bucketed by tick period, with lazy invalidation (stale entries are
+    # discarded at peek time).
+    events = _CalendarQueue(RESCHEDULE_EVERY)
+    events.push(0.0, _EV_RESCHED)
+    # Dirty-slice bookkeeping: at most `capacity` jobs hold workers at
+    # once, so per-event scans (estimates, advance, unfreeze checks,
+    # contention counts) run over `run` — the absolute rows with w > 0 —
+    # instead of the thousands of queued w=0 rows a saturated 10k-job
+    # trace carries.  `run` (and the cached communicating-job count) only
+    # change at allocation changes and completions; `fresh` holds rows
+    # admitted since the last completion scan, the only other rows whose
+    # remaining work could newly sit at <= 0.
+    run = np.empty(0, np.int64)
+    comm_n = 0
+    fresh: list[int] = []
+
+    def refresh_run() -> None:
+        nonlocal run, comm_n
+        s, n = st.start, st.n
+        w = st.w[s:s + n]
+        run = np.nonzero(w > 0)[0] + s
+        if penalty:
+            comm_n = (int(st.spanning[s:s + n].sum()) if peng is not None
+                      else int((w >= 2).sum()))
 
     def apply_alloc(now: float) -> None:
         nonlocal static_key, static_target
-        n = st.n
+        s, n = st.start, st.n
         if policy.static:
             # a static policy's target depends only on the active-set
             # identity/order, so a pure reschedule tick with an unchanged
-            # set can reuse the previous solve verbatim
-            key = st.ids[:n].tobytes()
+            # set can reuse the previous solve verbatim.  The monotone
+            # (admissions, completions) counter pair identifies the set:
+            # any membership change moves one of them.
+            key = (st.admitted, len(done))
             if key != static_key:
                 static_key = key
                 static_target = policy.allocate(
@@ -293,105 +465,121 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
             target = policy.allocate(
                 st.view(None if peng is None else peng.view()),
                 cluster, now)
-        changed = np.nonzero(target != st.w[:n])[0]
+        changed = np.nonzero(target != st.w[s:s + n])[0]
         if peng is None:
             if not len(changed):
                 return
-            st.w[:n] = target
-            st.speed_now[changed] = st.tables[changed, target[changed]]
-            started = changed[target[changed] > 0]
+            st.w[s:s + n] = target
+            gi = changed + s
+            st.speed_now[gi] = st.tables[st.rows[gi], target[changed]]
+            started = gi[target[changed] > 0]
         else:
             # placement pass runs even when no target changed: a
             # completion may have opened a defrag/consolidation move
-            st.w[:n] = target
-            upd, factors, spans = peng.apply(st.ids[:n], target,
+            st.w[s:s + n] = target
+            upd, factors, spans = peng.apply(st.ids[s:s + n], target,
                                              changed.tolist())
             if not len(upd):
                 return
-            st.place_factor[upd] = factors
-            st.spanning[upd] = spans
-            st.speed_now[upd] = (st.tables[upd, target[upd]]
-                                 * st.place_factor[upd])
-            started = upd[target[upd] > 0]
+            gi = upd + s
+            st.place_factor[gi] = factors
+            st.spanning[gi] = spans
+            st.speed_now[gi] = (st.tables[st.rows[gi], target[upd]]
+                                * factors)
+            started = gi[target[upd] > 0]
+        refresh_run()
         until = now + restart_cost
         # batched restart freeze: every job whose allocation changed
-        # unfreezes at the same instant, so one heap entry covers them all
-        # (the per-job push loop was the last Python loop on this path)
+        # unfreezes at the same instant, so one queue entry covers them
+        # all (the per-job push loop was the last Python loop here)
         if len(started):
             st.frozen[started] = until
-            heapq.heappush(events, (until, _EV_UNFREEZE))
+            events.push(until, _EV_UNFREEZE)
 
     while pi < n_jobs or st.n or delayed:
         # --- next event time -------------------------------------------
         # discard stale static events, then peek the earliest valid one
-        while events:
-            t, kind = events[0]
+        while True:
+            head = events.peek()
+            # a valid reschedule event always exists; an empty queue means
+            # the bookkeeping lost it and the loop would stall forever
+            assert head is not None, (
+                "event queue drained: no reschedule event pending")
+            t, kind = head
             if kind == _EV_RESCHED:
                 if t == next_resched:
                     break
             else:
-                # batched unfreeze: valid while any live job still thaws
-                # exactly at t (re-freezes move `frozen` past t and
-                # completions drop rows — either stales the entry)
-                n_ = st.n
-                if (t > now and n_
-                        and bool(np.any((st.frozen[:n_] == t)
-                                        & (st.w[:n_] > 0)))):
+                # batched unfreeze: valid while any live allocated job
+                # still thaws exactly at t (re-freezes move `frozen` past
+                # t and completions drop rows — either stales the entry)
+                if (t > now and len(run)
+                        and bool(np.any(st.frozen[run] == t))):
                     break
-            heapq.heappop(events)
-        # a valid reschedule event always exists; an empty queue means the
-        # bookkeeping above lost it and the simulation would stall forever
-        assert events, "event queue drained: no reschedule event pending"
-        t_min = events[0][0]
+            events.pop()
+        t_min = t
         if pi < n_jobs and pending[pi].arrival < t_min:
             t_min = pending[pi].arrival
         # completion estimates are recomputed from (now, remaining) every
-        # event on purpose — see module docstring (bit-identical trajectory)
-        n = st.n
-        if n:
-            w = st.w[:n]
-            frozen = st.frozen[:n]
-            speed = st.speed_now[:n]
+        # event on purpose — see module docstring (bit-identical
+        # trajectory); only the w>0 slice can run, so only it is scanned
+        frozen_r = speed_r = None
+        if len(run):
+            frozen_r = st.frozen[run]
+            speed_r = st.speed_now[run]
             if penalty:
                 # GADGET-style link sharing: every concurrently-allocated
                 # ring job (w >= 2, frozen or not — it holds its links)
                 # runs at contention_factor(k) of nominal speed.  Under a
                 # placement engine only *actually node-spanning* rings
                 # contend — they share the inter-node fabric; intra-node
-                # rings never touch it.
-                comm = st.spanning[:n] if peng is not None else (w >= 2)
-                fac = cluster.contention_factor(int(comm.sum()))
+                # rings never touch it.  (The count is cached: it only
+                # moves when allocations or membership do.)
+                fac = cluster.contention_factor(comm_n)
                 if fac != 1.0:
-                    speed = np.where(comm, speed * fac, speed)
-            running = np.nonzero((w > 0) & (frozen <= now)
-                                 & (speed > 0.0))[0]
-            if len(running):
-                est = now + st.remaining[:n][running] / speed[running]
+                    comm = (st.spanning[run] if peng is not None
+                            else st.w[run] >= 2)
+                    speed_r = np.where(comm, speed_r * fac, speed_r)
+            sel = (frozen_r <= now) & (speed_r > 0.0)
+            if sel.any():
+                est = now + st.remaining[run[sel]] / speed_r[sel]
                 e_min = est.min()
                 if e_min < t_min:
                     t_min = e_min
         t_next = now if t_min < now else t_min
 
         # --- advance progress -------------------------------------------
-        if n:
-            dt = t_next - np.maximum(frozen, now)
-            adv = np.nonzero((w > 0) & (dt > 0.0))[0]
-            if len(adv):
-                st.remaining[adv] -= dt[adv] * speed[adv]
+        adv = None
+        if len(run):
+            dt = t_next - np.maximum(frozen_r, now)
+            pos = dt > 0.0
+            if pos.any():
+                adv = run[pos]
+                st.remaining[adv] -= dt[pos] * speed_r[pos]
 
         now = t_next
 
         # --- completions -------------------------------------------------
+        # only rows that advanced (or were just admitted) can newly reach
+        # the threshold — the dirty slice of the old full-width scan
         finished = False
-        if n:
-            fin = st.remaining[:n] <= 1e-9
+        if fresh:
+            cand = (np.asarray(fresh, np.int64) if adv is None
+                    else np.concatenate((adv, np.asarray(fresh, np.int64))))
+            fresh = []
+        else:
+            cand = adv
+        if cand is not None and len(cand):
+            fin = st.remaining[cand] <= 1e-9
             if fin.any():
                 finished = True
-                for i in np.nonzero(fin)[0]:
+                gone = np.unique(cand[fin])        # ascending, like the
+                for i in gone.tolist():            # old full-width scan
                     done[int(st.ids[i])] = now
                     if peng is not None:
                         peng.release(int(st.ids[i]))
-                st.compact(~fin)
+                st.remove(gone.tolist())
+                refresh_run()
 
         # --- arrivals ----------------------------------------------------
         arrived = False
@@ -402,8 +590,8 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
             for j in delayed:
                 verdict = peng.admit(j, st.n, len(still), now)
                 if verdict == "admit":
-                    st.add(j, j.speed_table(cluster),
-                           now if policy.explores else None)
+                    fresh.append(st.add(j, j.speed_table(cluster),
+                                        now if policy.explores else None))
                     peng.register(j)
                     arrived = True
                 elif verdict == "reject":
@@ -430,11 +618,11 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
             # the cluster-keyed table row (flat clusters share the int-path
             # cache, so this is the exact seed table); sized to `capacity`,
             # not j.max_w: j.max_w may exceed the cluster (mixed fleets),
-            # and a capacity-sized row makes every _SoAState.tables row the
+            # and a capacity-sized row makes every interned table row the
             # same width — the solver never probes past
             # min(j.max_w, capacity) anyway.
-            st.add(j, j.speed_table(cluster),
-                   now if policy.explores else None)
+            fresh.append(st.add(j, j.speed_table(cluster),
+                                now if policy.explores else None))
             arrived = True
 
         if st.n > peak:
@@ -445,7 +633,7 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
             if st.n:
                 apply_alloc(now)
             next_resched = now + RESCHEDULE_EVERY
-            heapq.heappush(events, (next_resched, _EV_RESCHED))
+            events.push(next_resched, _EV_RESCHED)
 
     return SimResult(strategy=policy.spec, completion_times=done,
                      arrival_times=arrivals, peak_concurrency=peak,
