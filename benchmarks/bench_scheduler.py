@@ -12,17 +12,28 @@ a newly registered policy is parity-checked automatically.
 
 Writes ``BENCH_scheduler.json`` at the repo root with schema
 
-    {name: {"us_per_call": float, "speedup_vs_seed": float?}}
+    {name: {"us_per_call": float, "speedup_vs_seed": float?,
+            "peak_rss_mb": float?},
+     "_host": {...}}
 
 (``speedup_vs_seed`` is present only where the reference side was timed —
 rows with no seed counterpart, like the 1000/10000-job traces the seed
 loop cannot finish in reasonable time, simply omit the field instead of
-recording a misleading null).
+recording a misleading null).  The distinguished ``_host`` entry records
+the machine the numbers came from — CPU model, core count,
+Python/numpy versions, and the reference-engine machine scale — so
+floor baselines stop being guessed from commit-message archaeology.
+``peak_rss_mb`` rides on the large-trace rows (10k and up): the
+process-lifetime RSS high-water mark observed right after that trace
+size ran (sizes run in increasing order, so each value reads as "memory
+needed to get through this size").
 
     PYTHONPATH=src python -m benchmarks.bench_scheduler
     PYTHONPATH=src python -m benchmarks.bench_scheduler --profile-100k
-    PYTHONPATH=src python -m benchmarks.bench_scheduler --check      # CI gate
-    PYTHONPATH=src python -m benchmarks.bench_scheduler --check-10k  # forced
+    PYTHONPATH=src python -m benchmarks.bench_scheduler --profile-1m
+    PYTHONPATH=src python -m benchmarks.bench_scheduler --check       # CI gate
+    PYTHONPATH=src python -m benchmarks.bench_scheduler --check-10k   # forced
+    PYTHONPATH=src python -m benchmarks.bench_scheduler --check-100k  # forced
     PYTHONPATH=src python -m benchmarks.run scheduler --json out.json
 
 ``--check`` runs every parity assertion (solver allocations, engine
@@ -31,11 +42,14 @@ pattern — via ``assert_trace_parity``, which compares completion times,
 peak concurrency, migrations and rejections at every site) but no timing
 loops and no JSON write — seconds, not minutes, so CI can gate on it per
 PR.  It finishes with the gated 10k-job floor (srtf >= 5x over the PR-4
-baseline, machine-normalized against the frozen reference engine) when
-the parity checks left wall-clock budget for it; ``--check-10k`` forces
-that gate unconditionally (the non-blocking full-suite lane).
-``--profile-100k`` adds the non-gating ``simulate/100000jobs/*`` rows to
-the timed run.
+baseline, machine-normalized against the frozen reference engine) and
+then the 100k-job floor (machine-normalized wall ceiling per strategy),
+each only while the earlier checks left wall-clock budget for it;
+``--check-10k`` forces the 10k gate unconditionally and ``--check-100k``
+forces both floors (the non-blocking full-suite lane).
+``--profile-100k`` / ``--profile-1m`` add the non-gating
+``simulate/100000jobs/*`` / ``simulate/1000000jobs/*`` rows to the
+timed run.
 """
 from __future__ import annotations
 
@@ -47,6 +61,49 @@ import numpy as np
 
 JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
                          "BENCH_scheduler.json")
+
+
+def _peak_rss_mb() -> float:
+    """Process-lifetime peak RSS in MiB (``ru_maxrss`` is KiB on Linux,
+    bytes on macOS).  A monotone high-water mark — callers sample it
+    after each trace size, in increasing size order, so the per-size
+    numbers read as cumulative footprint, not per-size deltas."""
+    import resource
+    import sys
+    peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    if sys.platform == "darwin":
+        return peak / (1024.0 * 1024.0)
+    return peak / 1024.0
+
+
+def _host_metadata(machine_scale: float | None = None) -> dict:
+    """The ``_host`` entry for ``BENCH_scheduler.json``: enough machine
+    identity to interpret the absolute numbers (CPU model, core count,
+    interpreter/numpy versions) plus the measured reference-engine scale
+    relative to the PR-4 baseline machine, so the committed floors can be
+    re-derived instead of guessed from comments."""
+    import platform
+    cpu_model = ""
+    try:
+        with open("/proc/cpuinfo") as fh:
+            for line in fh:
+                if line.startswith("model name"):
+                    cpu_model = line.split(":", 1)[1].strip()
+                    break
+    except OSError:
+        pass
+    if not cpu_model:
+        cpu_model = platform.processor() or platform.machine()
+    meta = {
+        "cpu_model": cpu_model,
+        "cpu_count": os.cpu_count(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "numpy": np.__version__,
+    }
+    if machine_scale is not None:
+        meta["machine_scale_vs_pr4_baseline"] = machine_scale
+    return meta
 
 
 def _time(fn, min_repeats: int = 3, budget_s: float = 2.0) -> float:
@@ -318,6 +375,9 @@ def bench_10k(results, csv, gate: bool = True) -> tuple[float, float]:
         assert len(last["res"].completion_times) == 10_000, (
             f"simulate(10k jobs, {strat}) lost jobs")
         _record(results, csv, f"simulate/10000jobs/{strat}", fast_s)
+        rss = _peak_rss_mb()
+        results[f"simulate/10000jobs/{strat}"]["peak_rss_mb"] = rss
+        csv(f"simulate/10000jobs/{strat}/peak_rss_mb,0,{rss:.0f}")
         speedup = BASELINE_10K_S[strat] * scale / fast_s
         csv(f"simulate/10000jobs/{strat}/speedup_vs_pr4,0,{speedup:.1f}x")
         if strat == "srtf":
@@ -331,16 +391,30 @@ def bench_10k(results, csv, gate: bool = True) -> tuple[float, float]:
     return srtf_s, scale
 
 
-def bench_100k(results, csv) -> None:
-    """Non-gating 100k-job profile rows (``--profile-100k``): the
-    workload-study scale the incremental core opens up.  Arrival rate
-    matches the 10k trace (same 250 s mean interarrival via
-    ``make_workload``), so the backlog depth — not the per-job work —
-    is what grows 10x.  Job conservation is still asserted; wall time is
-    a trend line, not a gate."""
+# The 100k-job floor (ISSUE 8): machine-normalized wall ceiling per
+# strategy.  The ISSUE target is ~10 s on the baseline (scale-1.0)
+# machine; the sparse-delta core lands at ~10.5 s (precompute) /
+# ~11.3 s (srtf) normalized, down from 47 / 65 s raw before it.  The
+# ceilings sit ~25% above the landing numbers: raw wall swings +-5%
+# run-to-run and the machine-scale probe another +-8%, so a tighter
+# bound flakes on timer noise while a real regression (the pre-delta
+# core was 4-6x slower) still trips it by miles.
+CEIL_100K_S = {"precompute": 13.0, "srtf": 14.0}
+
+
+def bench_100k(results, csv, gate: bool = False,
+               scale: float | None = None) -> None:
+    """100k-job rows: the workload-study scale the incremental core opens
+    up.  Arrival rate matches the 10k trace (same 250 s mean interarrival
+    via ``make_workload``), so the backlog depth — not the per-job work —
+    is what grows 10x.  Job conservation is always asserted; with
+    ``gate=True`` (the ``--check-100k`` lane) the machine-normalized wall
+    time must also stay under ``CEIL_100K_S`` per strategy."""
     from repro.core.jobs import make_workload
     from repro.core.simulator import simulate
 
+    if gate and scale is None:
+        scale = _machine_scale()
     jobs = make_workload("poisson", 100_000, 250.0, 0)
     for strat in ("precompute", "srtf"):
         last: dict = {}
@@ -350,6 +424,39 @@ def bench_100k(results, csv) -> None:
         assert len(last["res"].completion_times) == 100_000, (
             f"simulate(100k jobs, {strat}) lost jobs")
         _record(results, csv, f"simulate/100000jobs/{strat}", fast_s)
+        rss = _peak_rss_mb()
+        results[f"simulate/100000jobs/{strat}"]["peak_rss_mb"] = rss
+        csv(f"simulate/100000jobs/{strat}/peak_rss_mb,0,{rss:.0f}")
+        if gate:
+            norm = fast_s / scale
+            csv(f"simulate/100000jobs/{strat}/normalized_s,0,{norm:.1f}")
+            assert norm <= CEIL_100K_S[strat], (
+                f"100k-job {strat} regressed: {fast_s:.2f}s raw is "
+                f"{norm:.1f}s machine-normalized (ceiling "
+                f"{CEIL_100K_S[strat]}s, machine scale {scale:.2f})")
+
+
+def bench_1m(results, csv) -> None:
+    """Non-gating 1M-job rows (``--profile-1m``): the first
+    production-cluster-scale trace — arrival-rate-matched to the 10k/100k
+    traces, so backlog depth grows another 10x.  Minutes of wall per
+    strategy: a trend line for the trajectory note in
+    ``benchmarks/README.md``, never a CI gate."""
+    from repro.core.jobs import make_workload
+    from repro.core.simulator import simulate
+
+    jobs = make_workload("poisson", 1_000_000, 250.0, 0)
+    for strat in ("precompute", "srtf"):
+        last: dict = {}
+        fast_s = _time(lambda: last.__setitem__(
+            "res", simulate(jobs, 64, strat)),
+                       min_repeats=1, budget_s=0.0)
+        assert len(last["res"].completion_times) == 1_000_000, (
+            f"simulate(1M jobs, {strat}) lost jobs")
+        _record(results, csv, f"simulate/1000000jobs/{strat}", fast_s)
+        rss = _peak_rss_mb()
+        results[f"simulate/1000000jobs/{strat}"]["peak_rss_mb"] = rss
+        csv(f"simulate/1000000jobs/{strat}/peak_rss_mb,0,{rss:.0f}")
 
 
 def bench_table3(results, csv) -> None:
@@ -381,13 +488,17 @@ def bench_table3(results, csv) -> None:
 CHECK_BUDGET_S = 120.0
 
 
-def check(csv=print, gate_10k: bool | None = None) -> None:
+def check(csv=print, gate_10k: bool | None = None,
+          gate_100k: bool | None = None) -> None:
     """Parity-only mode for CI: every correctness assertion the timed
     benchmark makes, none of the timing loops, no JSON write.
 
     ``gate_10k=None`` runs the 10k-job floor only if the parity checks
     finished inside ``CHECK_BUDGET_S`` (keeping the blocking lane under
     its budget on slow machines); True forces it, False skips it.
+    ``gate_100k`` works the same way against the cumulative wall clock —
+    on a fast runner the blocking lane covers the 100k floor too, on a
+    slow one it defers to the non-blocking lane's ``--check-100k``.
     """
     t0 = time.perf_counter()
     for n_jobs in (10, 30, 60):
@@ -418,21 +529,34 @@ def check(csv=print, gate_10k: bool | None = None) -> None:
         if not gate_10k:
             csv(f"check/10k_gate,0,deferred (parity took {elapsed:.0f}s "
                 f">= budget {CHECK_BUDGET_S:.0f}s; full lane forces it)")
+    scale = None
     if gate_10k:
-        bench_10k({}, csv)
+        _, scale = bench_10k({}, csv)
         csv("check/simulate_10000jobs_floor,0,ok")
+    elapsed = time.perf_counter() - t0
+    if gate_100k is None:
+        gate_100k = gate_10k and elapsed < CHECK_BUDGET_S
+        if not gate_100k:
+            csv(f"check/100k_gate,0,deferred (wall at {elapsed:.0f}s "
+                f">= budget {CHECK_BUDGET_S:.0f}s; full lane forces it)")
+    if gate_100k:
+        bench_100k({}, csv, gate=True, scale=scale)
+        csv("check/simulate_100000jobs_floor,0,ok")
     csv(f"check/wall_us,{(time.perf_counter() - t0) * 1e6:.0f},done")
 
 
 def main(csv=print, write_json: bool = True,
-         profile_100k: bool = False) -> dict:
+         profile_100k: bool = False, profile_1m: bool = False) -> dict:
     results: dict[str, dict] = {}
     bench_solvers(results, csv)
     bench_simulate(results, csv)
     bench_1000jobs(results, csv)
-    bench_10k(results, csv)
+    _, scale = bench_10k(results, csv)
     if profile_100k:
         bench_100k(results, csv)
+    if profile_1m:
+        bench_1m(results, csv)
+    results["_host"] = _host_metadata(scale)
     bench_table3(results, csv)
     sim = results["simulate/60jobs/precompute"]["speedup_vs_seed"]
     csv(f"scheduler/simulate_speedup_vs_seed,0,{sim:.1f}x")
@@ -448,9 +572,12 @@ def main(csv=print, write_json: bool = True,
 if __name__ == "__main__":
     import sys
     argv = sys.argv[1:]
-    if "--check-10k" in argv:
+    if "--check-100k" in argv:
+        check(gate_10k=True, gate_100k=True)
+    elif "--check-10k" in argv:
         check(gate_10k=True)
     elif "--check" in argv:
         check()
     else:
-        main(profile_100k="--profile-100k" in argv)
+        main(profile_100k="--profile-100k" in argv,
+             profile_1m="--profile-1m" in argv)

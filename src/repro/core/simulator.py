@@ -37,7 +37,7 @@ Two engines, one trajectory:
     reference active-list order (order is load-bearing for tie-breaks and
     FIFO grants) occupying a sliding window of doubling-growth arrays —
     head completions advance the window in O(1), interior ones shift the
-    shorter side.  Speed tables are *interned*: jobs with identical
+    shorter side (never the whole set — removal is O(min side)).  Speed tables are *interned*: jobs with identical
     speed-determining parameters share one row of a distinct-rows matrix
     through a ``rows`` indirection (``JobSpec.speed_table`` returns
     shared cached arrays, bit-identical to per-scalar ``speed`` calls),
@@ -51,6 +51,13 @@ Two engines, one trajectory:
     contention counts) touch only the dirty slice: the <= capacity rows
     holding workers, tracked incrementally, plus rows admitted since the
     last scan — a saturated 100k-job backlog costs events nothing.
+    ``slotted`` policies return a sparse :class:`scheduler.AllocDelta`
+    (only the rows whose allocation may have moved) that the engine
+    applies in O(Δ) — no dense target, no full-width compare — and when
+    the running set is small (<= 16 rows, srtf's steady state) the
+    per-event scans run as plain-float scalar loops over a cached
+    effective-speed list: the same IEEE-754 elementwise operations the
+    vectorized path performs, so the trajectory stays bit-identical.
     Deterministic events (reschedule ticks, restart-freeze expiries)
     live in a bucketed calendar queue (``_CalendarQueue``, heap-order
     identical, O(1) amortized for this dense near-future stream), and
@@ -80,6 +87,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import math
 
 import numpy as np
 
@@ -171,6 +179,11 @@ def simulate(jobs: list[JobSpec], capacity: int | None = None,
 _EV_RESCHED = 0
 _EV_UNFREEZE = 1
 
+# Shared "no completions this event" sentinel: the scalar advance loop
+# compares by identity and only allocates a real list on the first find,
+# so the common no-completion event allocates nothing.  Never mutated.
+_NO_COMP: list = []
+
 
 class _CalendarQueue:
     """Bucketed calendar queue for the fast engine's static events.
@@ -229,42 +242,52 @@ class _CalendarQueue:
 
 
 class _SoAState:
-    """Order-preserving structure-of-arrays active set (fast engine).
+    """Slot-stable structure-of-arrays active set (fast engine).
 
-    One row per active job, in the same order the reference engine keeps
-    its ``active`` list (arrival order with in-place removals) — the order
-    is load-bearing: solver tie-breaks, FIFO fixed grants and explore-gang
-    grants all key off it.
+    One row per *admitted* job, indexed by its admission slot: row
+    ``s`` is the s-th job ever admitted, and rows never move.  Slot
+    order is arrival order — the order the reference engine's active
+    list preserves and every solver tie-break keys off — so the live
+    subsequence of the slot space *is* the reference list.  A completion
+    flips ``alive[s]`` off in O(1) (plus amortized-O(1) bookkeeping
+    below) instead of shifting array rows: the min-side memmove the old
+    windowed layout paid per interior completion was SRTF's worst case
+    (its completions land mid-window by design) and priced 1M-job
+    traces out entirely.
 
-    The live rows occupy the window ``[start, start + n)`` of arrays that
-    grow by doubling.  A completion removes its row by shifting whichever
-    side of the window is *shorter* (head completions — the common case
-    under FIFO-ish service — just advance ``start``), so removal costs
-    O(min(side)) instead of the full O(n x row-width) matrix copy the
-    10k-job traces used to pay per completion.
+    Dead slots are skipped on enumeration through ``nxt``, a
+    path-compressed next-live pointer chain (``nxt[s]`` = first
+    possibly-live slot after a dead ``s``), giving O(α) amortized hops;
+    ``lo``/``hi`` bound the live region and ``n`` counts it.
 
-    Speed tables are *interned*: ``rows[i]`` indexes job i's row in a
+    ``pref`` caches the FIFO candidate prefix — the first
+    ``min(n, capacity)`` live slots, the only jobs any seeded solver
+    can grant workers — maintained incrementally (append on arrival,
+    bisect-patch + next-live refill on a prefix death), so a solver's
+    ``prefix(k)`` call is an O(1) ndarray slice instead of an O(n) live
+    scan.
+
+    Speed tables are *interned*: ``rows[s]`` indexes job s's row in a
     matrix holding only the distinct tables of the fleet (keyed by the
     object identity of the cached ``JobSpec.speed_table`` array), so a
     10k-job homogeneous trace stores one 65-float row, not a 10k x 65
-    matrix that must be copied on every completion.
-
-    ``seq`` carries each job's admission number (strictly increasing in
-    window order) and ``pos_of_seq`` maps it back to the absolute row
-    (-1 once the job is gone) — the spine the cross-tick solver state in
-    :mod:`repro.core.scheduler` hangs off.
+    matrix.
     """
 
     _ARRAYS = ("ids", "remaining", "w", "frozen", "speed_now",
                "explore_started", "max_w", "place_factor", "spanning",
-               "seq", "rows")
+               "rows")
 
-    __slots__ = _ARRAYS + ("n", "start", "tables", "n_rows", "pos_of_seq",
-                           "admitted", "_row_ids", "_row_pin", "ctx")
+    __slots__ = _ARRAYS + ("n", "lo", "hi", "alive", "nxt", "tables",
+                           "n_rows", "tables_pos", "pref", "pref_cap",
+                           "pref_version", "_pref_arr", "_pref_dirty",
+                           "_row_ids", "_row_pin", "ctx", "_view")
 
-    def __init__(self, table_width: int, cap: int = 16):
-        self.n = 0
-        self.start = 0
+    def __init__(self, table_width: int, cap: int = 16,
+                 prefix_cap: int | None = None):
+        self.n = 0                          # live jobs
+        self.lo = 0                         # first possibly-live slot
+        self.hi = 0                         # one past the last admitted
         self.ids = np.zeros(cap, np.int64)
         self.remaining = np.zeros(cap)
         self.w = np.zeros(cap, np.int64)
@@ -277,27 +300,37 @@ class _SoAState:
         # (always 1.0 / False on legacy clusters)
         self.place_factor = np.ones(cap)
         self.spanning = np.zeros(cap, bool)
-        self.seq = np.zeros(cap, np.int64)
         self.rows = np.zeros(cap, np.int64)
+        self.alive = np.zeros(cap, bool)
+        self.nxt = np.zeros(cap, np.int64)
         self.tables = np.zeros((4, table_width))
         self.n_rows = 0
-        self.pos_of_seq = np.full(cap, -1, np.int64)
-        self.admitted = 0
+        # every interned row has f(w) > 0 for all w >= 1 (checked once
+        # per distinct row) — lets the engine skip per-event speed masks
+        self.tables_pos = True
+        # FIFO prefix cache: first min(n, pref_cap) live slots (the
+        # engine builds tables capacity+1 wide, so that is the default)
+        self.pref: list[int] = []
+        self.pref_cap = (max(table_width - 1, 1) if prefix_cap is None
+                         else prefix_cap)
+        self.pref_version = 0   # bumped on any prefix membership change
+        self._pref_arr = np.empty(0, np.int64)
+        self._pref_dirty = False
         self._row_ids: dict[int, int] = {}
         self._row_pin: list[np.ndarray] = []    # keeps id() keys alive
         self.ctx = sched.IncrementalContext()
+        self._view: sched.AllocView | None = None
 
     def _make_room(self) -> None:
-        """The window hit the right edge: double the arrays *in place*
-        (positions preserved — the engine holds absolute row indices
-        across admissions, so the window never slides back; the dead head
-        space is bounded by total admissions, a few MB at 100k jobs)."""
+        """Slot space full: double every array (slots are absolute and
+        never move, so this is one copy of the admitted region —
+        amortized O(1) per admission)."""
         cap = 2 * len(self.ids)
-        s, n = self.start, self.n
-        for name in self._ARRAYS:
+        hi = self.hi
+        for name in self._ARRAYS + ("alive", "nxt"):
             old = getattr(self, name)
             new = np.zeros(cap, old.dtype)
-            new[s:s + n] = old[s:s + n]
+            new[:hi] = old[:hi]
             setattr(self, name, new)
 
     def _row_id(self, table_row: np.ndarray) -> int:
@@ -314,14 +347,15 @@ class _SoAState:
             self._row_ids[id(table_row)] = rid
             self._row_pin.append(table_row)
             self.n_rows = rid + 1
+            if not bool((table_row[1:] > 0.0).all()):
+                self.tables_pos = False
         return rid
 
     def add(self, spec: JobSpec, table_row: np.ndarray,
             explore_started: float | None) -> int:
-        i = self.start + self.n
+        i = self.hi
         if i == len(self.ids):
             self._make_room()
-            i = self.start + self.n
         self.ids[i] = spec.job_id
         self.remaining[i] = spec.epochs
         self.w[i] = 0
@@ -333,67 +367,113 @@ class _SoAState:
         self.place_factor[i] = 1.0
         self.spanning[i] = False
         self.rows[i] = self._row_id(table_row)
-        s = self.admitted
-        if s == len(self.pos_of_seq):
-            pos = np.full(2 * s, -1, np.int64)
-            pos[:s] = self.pos_of_seq
-            self.pos_of_seq = pos
-        self.seq[i] = s
-        self.pos_of_seq[s] = i
-        self.admitted = s + 1
+        self.alive[i] = True
+        self.nxt[i] = i + 1     # read only once dead: the successor slot
+        self.hi = i + 1
         self.n += 1
+        if len(self.pref) < self.pref_cap:
+            self.pref.append(i)
+            self.pref_version += 1
+            self._pref_dirty = True
         return i
 
+    def _find(self, s: int) -> int:
+        """First live slot >= ``s`` (caller guarantees one exists), with
+        path compression over the dead slots walked."""
+        alive, nxt = self.alive, self.nxt
+        r = s
+        while not alive[r]:
+            r = int(nxt[r])
+        if r > s:
+            while not alive[s]:
+                t = int(nxt[s])
+                nxt[s] = r
+                s = t
+        return r
+
     def remove(self, gone: list[int]) -> None:
-        """Drop the rows at absolute positions ``gone`` (ascending),
-        preserving relative order, by shifting the shorter side."""
-        s, n = self.start, self.n
-        k = len(gone)
-        self.pos_of_seq[self.seq[gone]] = -1
-        if gone[-1] - gone[0] == k - 1 and gone[0] == s:
-            # contiguous head block: just advance the window
-            self.start = s + k
-            self.n = n - k
-            return
-        if k == 1:
-            p = gone[0]
-            if p - s <= s + n - 1 - p:      # head side shorter: shift right
-                for name in self._ARRAYS:
-                    arr = getattr(self, name)
-                    arr[s + 1:p + 1] = arr[s:p]
-                self.pos_of_seq[self.seq[s + 1:p + 1]] += 1
-                self.start = s + 1
-            else:                           # tail side shorter: shift left
-                for name in self._ARRAYS:
-                    arr = getattr(self, name)
-                    arr[p:s + n - 1] = arr[p + 1:s + n]
-                self.pos_of_seq[self.seq[p:s + n - 1]] -= 1
-            self.n = n - 1
-            return
-        keep = np.ones(n, bool)
-        keep[np.asarray(gone, np.int64) - s] = False
-        kidx = np.nonzero(keep)[0] + s
-        m = len(kidx)
-        for name in self._ARRAYS:
-            arr = getattr(self, name)
-            arr[s:s + m] = arr[kidx]
-        self.pos_of_seq[self.seq[s:s + m]] = np.arange(s, s + m)
-        self.n = m
+        """Mark the jobs at slots ``gone`` (ascending) dead: O(1) per
+        slot plus amortized-O(1) ``lo`` advance and O(prefix-deaths)
+        prefix patching — never an array shift."""
+        alive = self.alive
+        for s in gone:
+            alive[s] = False
+        self.n -= len(gone)
+        lo, hi = self.lo, self.hi
+        while lo < hi and not alive[lo]:
+            lo += 1
+        self.lo = lo
+        pref = self.pref
+        if pref and gone[0] <= pref[-1]:
+            for s in gone:
+                if not pref or s > pref[-1]:
+                    break
+                j = bisect.bisect_left(pref, s)
+                if j < len(pref) and pref[j] == s:
+                    del pref[j]
+            # refill from the next live slots beyond the prefix so the
+            # invariant len(pref) == min(n, pref_cap) holds
+            while len(pref) < self.n and len(pref) < self.pref_cap:
+                pref.append(self._find(pref[-1] + 1 if pref else lo))
+            self.pref_version += 1
+            self._pref_dirty = True
+
+    def _prefix(self, k: int) -> np.ndarray:
+        """Slots of the first ``k`` live jobs (k <= min(n, pref_cap))."""
+        if self._pref_dirty:
+            self._pref_arr = np.array(self.pref, np.int64)
+            self._pref_dirty = False
+        return self._pref_arr[:k]
+
+    def live_slots(self) -> np.ndarray:
+        """All live slots, ascending — the dense active-set order.  O(hi
+        - lo): only the placement path and non-slotted (dense-contract)
+        policies pay it."""
+        return np.nonzero(self.alive[self.lo:self.hi])[0] + self.lo
 
     def view(self, placement=None) -> sched.AllocView:
-        """The policy-facing SoA views over the live window, with the
-        refreshed incremental context attached."""
-        s, n = self.start, self.n
+        """The slotted policy-facing view: full slot-indexed arrays plus
+        the refreshed incremental context.  The view object is reused
+        across solves — only the scalars move between them; the array
+        fields are rebound when the backing arrays grow (``_make_room``
+        reassigns all of them together, so one identity check covers
+        the lot) or a new table row is interned."""
         ctx = self.ctx
-        ctx.pos_of_seq = self.pos_of_seq
-        ctx.start = s
-        return sched.AllocView(remaining=self.remaining[s:s + n],
+        ctx.pref_version = self.pref_version
+        v = self._view
+        if (v is None or v.remaining is not self.remaining
+                or v.tables.shape[0] != self.n_rows):
+            # ``alive`` is rebound together with ``remaining`` when the
+            # arrays grow, so the identity check above covers the ctx
+            # fields too
+            ctx.alive = self.alive
+            ctx.prefix = self._prefix
+            v = self._view = sched.AllocView(
+                remaining=self.remaining,
+                tables=self.tables[:self.n_rows],
+                max_w=self.max_w,
+                explore_started=self.explore_started,
+                rows=self.rows,
+                placement=placement,
+                live=self.alive, lo=self.lo, hi=self.hi,
+                n_live=self.n,
+                inc=ctx)
+        else:
+            v.placement = placement
+            v.lo = self.lo
+            v.hi = self.hi
+            v.n_live = self.n
+        return v
+
+    def dense_view(self, ls: np.ndarray, placement=None) -> sched.AllocView:
+        """A dense (reference-shaped) view gathered over live slots
+        ``ls`` — the compatibility shim for non-slotted policies, which
+        keep the plain dense-target ``allocate`` contract."""
+        return sched.AllocView(remaining=self.remaining[ls],
                                tables=self.tables[:self.n_rows],
-                               max_w=self.max_w[s:s + n],
-                               explore_started=self.explore_started[s:s + n],
-                               rows=self.rows[s:s + n],
-                               seq=self.seq[s:s + n],
-                               inc=ctx,
+                               max_w=self.max_w[ls],
+                               explore_started=self.explore_started[ls],
+                               rows=self.rows[ls],
                                placement=placement)
 
 
@@ -419,104 +499,243 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
     next_resched = 0.0
     static_key: tuple | None = None
     static_target: np.ndarray | None = None
-    # Static-event queue: reschedule ticks and restart-freeze expiries,
-    # bucketed by tick period, with lazy invalidation (stale entries are
-    # discarded at peek time).
+    # Static-event queue: restart-freeze expiries only, bucketed by tick
+    # period, with lazy invalidation (stale entries are discarded at
+    # peek time).  The reschedule tick needs no queue at all — it is
+    # always exactly ``next_resched``, a scalar.
     events = _CalendarQueue(RESCHEDULE_EVERY)
-    events.push(0.0, _EV_RESCHED)
     # Dirty-slice bookkeeping: at most `capacity` jobs hold workers at
     # once, so per-event scans (estimates, advance, unfreeze checks,
-    # contention counts) run over `run` — the absolute rows with w > 0 —
+    # contention counts) run over `run` — the slots with w > 0 —
     # instead of the thousands of queued w=0 rows a saturated 10k-job
-    # trace carries.  `run` (and the cached communicating-job count) only
-    # change at allocation changes and completions; `fresh` holds rows
-    # admitted since the last completion scan, the only other rows whose
-    # remaining work could newly sit at <= 0.
+    # trace carries.  `run` is maintained *incrementally* from the
+    # sparse allocation deltas (and the cached communicating-job count
+    # with it); `fresh` holds slots admitted since the last completion
+    # scan, the only other rows whose remaining work could newly sit at
+    # <= 0.
     run = np.empty(0, np.int64)
+    run_list: list[int] = []      # same slots as plain ints, sorted
+    nr = 0                        # == len(run_list)
+    run_set: set[int] = set()
     comm_n = 0
     fresh: list[int] = []
+    use_slotted = policy.slotted
+    # Below this run-set size the per-event estimate/advance/completion
+    # pass runs as a scalar Python loop instead of vectorized numpy —
+    # same IEEE-754 ops element by element (gather/divide/multiply/
+    # subtract and an exact min), so the trajectory is bit-identical,
+    # but without the ~1-2 µs fixed cost per array op that dominates
+    # when only a handful of jobs hold workers (srtf runs ~8 winners on
+    # a 64-GPU cluster; the vector path keeps winning at ~64).
+    small_run = 16 if peng is None else -1
+    sp_l: list[float] = []        # effective speed per run_list slot
+    speed_eff = np.empty(0)       # effective speed per run entry
+    fac_ok = True                 # contention factor > 0 for this run set
+    # Scalar run summaries.  ``max_frz`` is a conservative upper bound
+    # on every running job's restart-freeze expiry: bumped at freeze
+    # time, never recomputed (a member leaving ``run`` can only lower
+    # the true max, so the bound stays sound and self-heals as time
+    # passes it).  With max_frz in the past — the steady state; freezes
+    # are short — the per-event estimate/advance pass needs no frozen
+    # gather and no masking at all.  ``spd_ok`` (every running job has
+    # nonzero speed) is the interned-table positivity flag on flat
+    # clusters and a per-refresh check under a placement engine, whose
+    # factors can zero a speed.
+    max_frz = 0.0
+    spd_ok = True
 
-    def refresh_run() -> None:
-        nonlocal run, comm_n
-        s, n = st.start, st.n
-        w = st.w[s:s + n]
-        run = np.nonzero(w > 0)[0] + s
+    def refresh_speed() -> None:
+        """Re-derive the run set's *effective* speeds (contention factor
+        folded in) once per membership/allocation change.  Every input —
+        ``speed_now``, ``w``, ``spanning``, ``comm_n`` — only moves
+        right before a refresh, so caching here is value-identical to
+        the old per-event recompute (same ops on the same floats), and
+        the per-event pass shrinks to a divide and a min."""
+        nonlocal sp_l, speed_eff, fac_ok
+        fac = cluster.contention_factor(comm_n) if penalty else 1.0
+        fac_ok = fac > 0.0
+        if nr <= small_run:
+            spd = st.speed_now
+            if fac != 1.0:
+                wv = st.w
+                sp_l = [spd[s] * fac if wv[s] >= 2 else spd[s]
+                        for s in run_list]
+            else:
+                sp_l = [spd[s] for s in run_list]
+        else:
+            sr = st.speed_now[run]
+            if fac != 1.0:
+                comm = (st.spanning[run] if peng is not None
+                        else st.w[run] >= 2)
+                sr = np.where(comm, sr * fac, sr)
+            speed_eff = sr
+
+    def refresh_run_from_set() -> None:
+        """Rebuild the sorted run list from the incrementally-updated
+        slot set — O(|run| log |run|) with |run| <= capacity, never
+        O(active jobs).  The ndarray twin is only materialized above the
+        scalar-loop threshold.  Flat clusters only (placement recomputes
+        dense)."""
+        nonlocal run, run_list, nr, comm_n
+        run_list = sorted(run_set)
+        nr = len(run_list)
+        if nr > small_run:
+            run = np.fromiter(run_list, np.int64, nr)
         if penalty:
-            comm_n = (int(st.spanning[s:s + n].sum()) if peng is not None
+            if nr <= small_run:
+                wv = st.w
+                comm_n = sum(1 for s in run_list if wv[s] >= 2)
+            else:
+                comm_n = int((st.w[run] >= 2).sum())
+        refresh_speed()
+
+    def refresh_run_dense(ls: np.ndarray | None = None) -> None:
+        nonlocal run, run_list, nr, comm_n, spd_ok
+        if ls is None:
+            ls = st.live_slots()
+        w = st.w[ls]
+        run = ls[w > 0]
+        run_list = run.tolist()
+        nr = len(run_list)
+        run_set.clear()
+        run_set.update(run_list)
+        if penalty:
+            comm_n = (int(st.spanning[ls].sum()) if peng is not None
                       else int((w >= 2).sum()))
+        if peng is not None:
+            spd_ok = (bool((st.speed_now[run] > 0.0).all()) if len(run)
+                      else True)
+        refresh_speed()
+
+    def solve_dense(ls: np.ndarray, pv, now: float) -> np.ndarray:
+        """A dense live-ordered target from the policy: non-slotted
+        policies return one natively; slotted policies' sparse deltas
+        are materialized into the context's reused scratch buffer (the
+        placement pass needs the full gang vector)."""
+        if not use_slotted:
+            return policy.allocate(st.dense_view(ls, pv), cluster, now)
+        delta = policy.allocate(st.view(pv), cluster, now)
+        target = st.ctx.scratch(len(ls))
+        target[:] = st.w[ls]
+        if len(delta.slots):
+            target[np.searchsorted(ls, delta.slots)] = delta.w
+        return target
+
+    p_allocate = policy.allocate
+    p_static = policy.static
+    slotted_fast = peng is None and use_slotted
+    st_view = st.view
 
     def apply_alloc(now: float) -> None:
-        nonlocal static_key, static_target
-        s, n = st.start, st.n
-        if policy.static:
-            # a static policy's target depends only on the active-set
-            # identity/order, so a pure reschedule tick with an unchanged
-            # set can reuse the previous solve verbatim.  The monotone
-            # (admissions, completions) counter pair identifies the set:
-            # any membership change moves one of them.
-            key = (st.admitted, len(done))
-            if key != static_key:
+        nonlocal static_key, static_target, max_frz
+        if slotted_fast:
+            # the sparse fast path: the policy names the slots that may
+            # have moved; everything else keeps its allocation — O(Δ)
+            # per tick, no dense target, no full-width compare
+            if p_static:
+                # a static policy's target depends only on the active
+                # set's identity/order: with the (admissions,
+                # completions) key unchanged the applied allocation is
+                # already the target.  The monotone counter pair
+                # identifies the set: any membership change moves one.
+                key = (st.hi, len(done))
+                if key == static_key:
+                    return
                 static_key = key
-                static_target = policy.allocate(
-                    st.view(None if peng is None else peng.view()),
-                    cluster, now)
-            target = static_target
-        else:
-            target = policy.allocate(
-                st.view(None if peng is None else peng.view()),
-                cluster, now)
-        changed = np.nonzero(target != st.w[s:s + n])[0]
-        if peng is None:
-            if not len(changed):
+            delta = p_allocate(st_view(None), cluster, now)
+            tslots, tw = delta.slots, delta.w
+            if not len(tslots):
                 return
-            st.w[s:s + n] = target
-            gi = changed + s
-            st.speed_now[gi] = st.tables[st.rows[gi], target[changed]]
-            started = gi[target[changed] > 0]
-        else:
-            # placement pass runs even when no target changed: a
-            # completion may have opened a defrag/consolidation move
-            st.w[s:s + n] = target
-            upd, factors, spans = peng.apply(st.ids[s:s + n], target,
-                                             changed.tolist())
-            if not len(upd):
+            cur = st.w[tslots]
+            chm = tw != cur
+            if not chm.any():
                 return
-            gi = upd + s
-            st.place_factor[gi] = factors
-            st.spanning[gi] = spans
-            st.speed_now[gi] = (st.tables[st.rows[gi], target[upd]]
-                                * factors)
-            started = gi[target[upd] > 0]
-        refresh_run()
+            gs = tslots[chm]
+            wn = tw[chm]
+            st.w[gs] = wn
+            st.speed_now[gs] = st.tables[st.rows[gs], wn]
+            for s, wv in zip(gs.tolist(), wn.tolist()):
+                if wv > 0:
+                    run_set.add(s)
+                else:
+                    run_set.discard(s)
+            refresh_run_from_set()
+            started = gs[wn > 0]
+        else:
+            pv = None if peng is None else peng.view()
+            ls = st.live_slots()
+            if p_static:
+                key = (st.hi, len(done))
+                if key != static_key:
+                    static_key = key
+                    # cached across events: copy out of the scratch
+                    # buffer the next solve would overwrite
+                    static_target = solve_dense(ls, pv, now).copy()
+                target = static_target
+            else:
+                target = solve_dense(ls, pv, now)
+            changed = np.nonzero(target != st.w[ls])[0]
+            if peng is None:
+                if not len(changed):
+                    return
+                gi = ls[changed]
+                st.w[gi] = target[changed]
+                st.speed_now[gi] = st.tables[st.rows[gi], target[changed]]
+                started = gi[target[changed] > 0]
+            else:
+                # placement pass runs even when no target changed: a
+                # completion may have opened a defrag/consolidation move
+                st.w[ls] = target
+                upd, factors, spans = peng.apply(st.ids[ls], target,
+                                                 changed.tolist())
+                if not len(upd):
+                    return
+                gi = ls[upd]
+                st.place_factor[gi] = factors
+                st.spanning[gi] = spans
+                st.speed_now[gi] = (st.tables[st.rows[gi], target[upd]]
+                                    * factors)
+                started = gi[target[upd] > 0]
+            refresh_run_dense(ls)
         until = now + restart_cost
         # batched restart freeze: every job whose allocation changed
         # unfreezes at the same instant, so one queue entry covers them
         # all (the per-job push loop was the last Python loop here)
         if len(started):
             st.frozen[started] = until
+            if until > max_frz:
+                max_frz = until
             events.push(until, _EV_UNFREEZE)
 
+    stall = 0
     while pi < n_jobs or st.n or delayed:
+        now0 = now
+        popped = False
         # --- next event time -------------------------------------------
-        # discard stale static events, then peek the earliest valid one
+        # discard stale unfreeze events, then take the earlier of the
+        # first valid one and the reschedule tick
         while True:
             head = events.peek()
-            # a valid reschedule event always exists; an empty queue means
-            # the bookkeeping lost it and the loop would stall forever
-            assert head is not None, (
-                "event queue drained: no reschedule event pending")
-            t, kind = head
-            if kind == _EV_RESCHED:
-                if t == next_resched:
-                    break
-            else:
-                # batched unfreeze: valid while any live allocated job
-                # still thaws exactly at t (re-freezes move `frozen` past
-                # t and completions drop rows — either stales the entry)
-                if (t > now and len(run)
-                        and bool(np.any(st.frozen[run] == t))):
+            if head is None:
+                t = next_resched
+                break
+            t = head[0]
+            # batched unfreeze: valid while any live allocated job
+            # still thaws exactly at t (re-freezes move `frozen` past
+            # t and completions drop rows — either stales the entry).
+            # The max_frz bound short-circuits the scan: t above it
+            # can match nothing.
+            if t > now and nr and t <= max_frz:
+                if nr <= small_run:
+                    frz = st.frozen
+                    if any(frz[s] == t for s in run_list):
+                        break
+                elif bool(np.any(st.frozen[run] == t)):
                     break
             events.pop()
+            popped = True
+        if next_resched < t:
+            t = next_resched
         t_min = t
         if pi < n_jobs and pending[pi].arrival < t_min:
             t_min = pending[pi].arrival
@@ -524,62 +743,135 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
         # event on purpose — see module docstring (bit-identical
         # trajectory); only the w>0 slice can run, so only it is scanned
         frozen_r = speed_r = None
-        if len(run):
-            frozen_r = st.frozen[run]
-            speed_r = st.speed_now[run]
-            if penalty:
-                # GADGET-style link sharing: every concurrently-allocated
-                # ring job (w >= 2, frozen or not — it holds its links)
-                # runs at contention_factor(k) of nominal speed.  Under a
-                # placement engine only *actually node-spanning* rings
-                # contend — they share the inter-node fabric; intra-node
-                # rings never touch it.  (The count is cached: it only
-                # moves when allocations or membership do.)
-                fac = cluster.contention_factor(comm_n)
-                if fac != 1.0:
-                    comm = (st.spanning[run] if peng is not None
-                            else st.w[run] >= 2)
-                    speed_r = np.where(comm, speed_r * fac, speed_r)
-            sel = (frozen_r <= now) & (speed_r > 0.0)
-            if sel.any():
-                est = now + st.remaining[run[sel]] / speed_r[sel]
-                e_min = est.min()
+        fastp = False
+        adv = None
+        scalar = False
+        comp_l: list[int] = _NO_COMP
+        if nr and nr <= small_run:
+            # scalar twin of the vectorized pass below: same per-element
+            # IEEE ops (max/divide then an exact min; multiply/subtract
+            # on advance), so every remaining-work value and completion
+            # estimate carries the same bits — just without ~10 array-op
+            # dispatches for a handful of running jobs.  The completion
+            # threshold is checked on the freshly-written value inside
+            # the advance loop — the same <= 1e-9 compare the vector
+            # path runs as a separate candidate scan.
+            scalar = True
+            remv = st.remaining
+            frz = st.frozen
+            no_frz = max_frz <= now
+            x_min = math.inf
+            for i, s in enumerate(run_list):
+                sv = sp_l[i]
+                if sv > 0.0 and (no_frz or frz[s] <= now):
+                    x = remv[s] / sv
+                    if x < x_min:
+                        x_min = x
+            if x_min < math.inf:
+                e_min = now + x_min
                 if e_min < t_min:
                     t_min = e_min
-        t_next = now if t_min < now else t_min
-
-        # --- advance progress -------------------------------------------
-        adv = None
-        if len(run):
-            dt = t_next - np.maximum(frozen_r, now)
-            pos = dt > 0.0
-            if pos.any():
-                adv = run[pos]
-                st.remaining[adv] -= dt[pos] * speed_r[pos]
-
-        now = t_next
+            t_next = now if t_min < now else t_min
+            if t_next > now:
+                for i, s in enumerate(run_list):
+                    f0 = frz[s]
+                    dt = t_next - (f0 if f0 > now else now)
+                    if dt > 0.0:
+                        rv = remv[s] - dt * sp_l[i]
+                        remv[s] = rv
+                        if rv <= 1e-9:
+                            if comp_l is _NO_COMP:
+                                comp_l = [s]
+                            else:
+                                comp_l.append(s)
+            now = t_next
+        elif nr:
+            # GADGET-style link sharing is folded into ``speed_eff`` at
+            # refresh time: every concurrently-allocated ring job
+            # (w >= 2, frozen or not — it holds its links) runs at
+            # contention_factor(k) of nominal speed; under a placement
+            # engine only *actually node-spanning* rings contend.
+            speed_r = speed_eff
+            spd_ok_now = spd_ok and fac_ok
+            if peng is None:
+                spd_ok_now = spd_ok_now and st.tables_pos
+            if max_frz <= now and spd_ok_now:
+                # nothing frozen, everything runnable: the select mask
+                # is provably all-True, so skip building it.  min(now +
+                # x_i) == now + min(x_i) exactly (monotone rounding), so
+                # the full-width add is skipped too — bits unchanged.
+                fastp = True
+                e_min = now + (st.remaining[run] / speed_r).min()
+                if e_min < t_min:
+                    t_min = e_min
+            else:
+                frozen_r = st.frozen[run]
+                sel = (frozen_r <= now) & (speed_r > 0.0)
+                if sel.any():
+                    est = now + st.remaining[run[sel]] / speed_r[sel]
+                    e_min = est.min()
+                    if e_min < t_min:
+                        t_min = e_min
+        if not scalar:
+            # --- advance progress (vector twin) --------------------------
+            t_next = now if t_min < now else t_min
+            if nr:
+                if fastp:
+                    dts = t_next - now
+                    if dts > 0.0:
+                        adv = run
+                        st.remaining[run] -= dts * speed_r
+                else:
+                    dt = t_next - np.maximum(frozen_r, now)
+                    pos = dt > 0.0
+                    if pos.any():
+                        adv = run[pos]
+                        st.remaining[adv] -= dt[pos] * speed_r[pos]
+            now = t_next
 
         # --- completions -------------------------------------------------
         # only rows that advanced (or were just admitted) can newly reach
         # the threshold — the dirty slice of the old full-width scan
         finished = False
-        if fresh:
-            cand = (np.asarray(fresh, np.int64) if adv is None
-                    else np.concatenate((adv, np.asarray(fresh, np.int64))))
-            fresh = []
+        glist: list[int] | None = None
+        if scalar:
+            if fresh:
+                # fresh (just-admitted) slots use the same threshold —
+                # dedupe against the advance-loop finds
+                remv = st.remaining
+                cl = comp_l + [s for s in fresh if remv[s] <= 1e-9]
+                fresh = []
+                if cl:
+                    glist = sorted(set(cl))
+            elif comp_l is not _NO_COMP:
+                glist = comp_l        # ascending already: run_list order
         else:
-            cand = adv
-        if cand is not None and len(cand):
-            fin = st.remaining[cand] <= 1e-9
-            if fin.any():
-                finished = True
-                gone = np.unique(cand[fin])        # ascending, like the
-                for i in gone.tolist():            # old full-width scan
-                    done[int(st.ids[i])] = now
-                    if peng is not None:
-                        peng.release(int(st.ids[i]))
-                st.remove(gone.tolist())
-                refresh_run()
+            if fresh:
+                cand = (np.asarray(fresh, np.int64) if adv is None
+                        else np.concatenate((adv,
+                                             np.asarray(fresh, np.int64))))
+                fresh = []
+            else:
+                cand = adv
+            if cand is not None and len(cand):
+                fin = st.remaining[cand] <= 1e-9
+                if fin.any():
+                    # ascending slots == arrival order, like the old dense
+                    # scan (python set/sort beats np.unique at these sizes)
+                    glist = sorted(set(cand[fin].tolist()))
+        if glist is not None:
+            finished = True
+            for i in glist:
+                done[int(st.ids[i])] = now
+                if peng is not None:
+                    peng.release(int(st.ids[i]))
+            st.remove(glist)
+            if peng is None:
+                for i in glist:
+                    run_set.discard(i)
+                refresh_run_from_set()
+            else:
+                refresh_run_dense()
 
         # --- arrivals ----------------------------------------------------
         arrived = False
@@ -629,11 +921,54 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
             peak = st.n
 
         # --- reallocation ------------------------------------------------
+        rescheduled = False
         if arrived or finished or now + 1e-9 >= next_resched:
             if st.n:
                 apply_alloc(now)
             next_resched = now + RESCHEDULE_EVERY
-            events.push(next_resched, _EV_RESCHED)
+            rescheduled = True
+
+        # --- termination guard (sub-ulp completion estimates) ------------
+        # Once the clock passes ~2^28 s, the shortest completion estimate
+        # can round to exactly ``now`` (x_min < ulp(now)/2): then
+        # t_next == now, dt == 0, remaining work never advances, and with
+        # no arrival / completion / queue pop / reschedule the iteration
+        # is a deterministic fixed point — the loop (and the seed loop,
+        # which computes the same doubles) would spin forever.  Three
+        # consecutive inert iterations prove the fixed point (one
+        # repetition already would, but the calendar cursor may still be
+        # settling on the first); the jobs whose estimate rounds to
+        # ``now`` then complete AT ``now`` — the event time an explicit
+        # completion-event queue would have fired at after the same
+        # rounding.  A trace that terminates without this guard never
+        # runs even one repeated inert iteration, so every
+        # previously-terminating trajectory is bit-identical.
+        if arrived or finished or popped or rescheduled or now > now0:
+            stall = 0
+        else:
+            stall += 1
+            if stall >= 3:
+                remv = st.remaining
+                frz = st.frozen
+                idle = max_frz <= now
+                stuck = []
+                for i, s in enumerate(run_list):
+                    sv = (sp_l[i] if nr <= small_run
+                          else float(speed_eff[i]))
+                    if (sv > 0.0 and (idle or frz[s] <= now)
+                            and now + remv[s] / sv == now):
+                        stuck.append(s)
+                if not stuck:
+                    raise RuntimeError(
+                        f"event loop stalled at t={now!r} with no "
+                        f"sub-ulp completion candidate")
+                for s in stuck:
+                    remv[s] = 0.0
+                # ride the just-admitted completion scan: the next
+                # event's candidate pass unions ``fresh`` with the
+                # advanced rows and applies the same <= 1e-9 threshold
+                fresh.extend(stuck)
+                stall = 0
 
     return SimResult(strategy=policy.spec, completion_times=done,
                      arrival_times=arrivals, peak_concurrency=peak,

@@ -1,22 +1,22 @@
-"""Incremental cross-tick scheduling core (ISSUE 5).
+"""Incremental cross-tick scheduling core (ISSUE 5) and the sparse
+allocation-delta contract (ISSUE 8).
 
 Three layers of gates:
 
-  * persistent gain-heap / remaining-time-heap identity: random
+  * delta-vs-dense identity across **all registered policies**: random
     arrival/run/freeze/completion sequences driven through the real
-    ``_SoAState`` + ``IncrementalContext`` spine, asserting at *every*
-    tick that the incremental solve equals a fresh solve over the same
-    views (hypothesis property + a deterministic fuzz twin that runs
-    even without hypothesis installed);
+    slot-stable ``_SoAState`` + ``IncrementalContext`` spine, asserting
+    at *every* tick that the slotted solve's delta, applied to the
+    engine-held allocation, equals a fresh dense-target solve over the
+    same live set (hypothesis property + a deterministic fuzz twin that
+    runs even without hypothesis installed);
   * speed-table row interning: identical jobs share one table array
     object and one ``_SoAState`` row id, distinct hardware does not;
   * the engine's supporting structures: calendar-queue order matches a
-    binary heap, and windowed removal preserves order and the
-    seq->position map on every path (head block, head shift, tail
-    shift, batch).
+    binary heap, and slot-stable removal preserves live order, the
+    next-live pointer chain, and the FIFO prefix cache on every path
+    (head, interior, tail, batch).
 """
-import dataclasses
-
 import heapq
 
 import numpy as np
@@ -32,21 +32,19 @@ from repro.core.simulator import _CalendarQueue, _SoAState
 CAPACITY = 16
 
 
-def _fresh_view(view: sched.AllocView) -> sched.AllocView:
-    """The same SoA views with the cross-tick spine stripped — forces
-    every policy down its fresh-solve path (the reference-oracle shape)."""
-    return dataclasses.replace(view, seq=None, inc=None)
-
-
 class _Harness:
-    """Drives one policy's incremental solver through an arbitrary
-    arrival/run/freeze/completion sequence over a real ``_SoAState``,
-    checking allocation identity with a fresh-heap solve at every tick.
+    """Drives one policy through an arbitrary arrival/run/freeze/
+    completion sequence over a real slot-stable ``_SoAState``, playing
+    the engine's role: slotted policies' sparse deltas are applied to
+    the held ``w`` array and the result is checked against a fresh
+    dense-target solve over the gathered live set at every tick.
 
-    Between ticks only jobs the *incremental* solve granted workers may
+    Between ticks only jobs the *applied* allocation granted workers may
     advance (exactly the engine's contract: w=0 and frozen jobs make no
     progress), and a "freeze" is modeled faithfully as a granted job
-    whose remaining work does not move.
+    whose remaining work does not move.  The clock advances so
+    exploratory's segment schedule (and its persistent cursor) is
+    exercised too.
     """
 
     def __init__(self, spec: str, seed: int):
@@ -55,53 +53,71 @@ class _Harness:
         self.st = _SoAState(table_width=CAPACITY + 1)
         self.rng = np.random.default_rng(seed)
         self.n_added = 0
-        self.target = np.zeros(0, np.int64)
+        self.now = 0.0
 
     def solve_and_check(self) -> None:
-        view = self.st.view()
-        inc = self.policy.allocate(view, self.cluster, 0.0)
-        fresh = self.policy.allocate(_fresh_view(view), self.cluster, 0.0)
-        assert np.array_equal(inc, fresh), (
-            f"{self.policy.spec}: incremental {inc.tolist()} != "
-            f"fresh {fresh.tolist()} at n={self.st.n}")
-        self.target = inc
+        st = self.st
+        ls = st.live_slots()
+        res = self.policy.allocate(st.view(), self.cluster, self.now)
+        applied = st.w[ls].copy()
+        if self.policy.slotted:
+            assert isinstance(res, sched.AllocDelta), (
+                f"{self.policy.spec}: slotted policies must return "
+                f"AllocDelta, got {type(res).__name__}")
+            if len(res.slots):
+                assert st.alive[res.slots].all(), (
+                    f"{self.policy.spec}: delta names a dead slot")
+                applied[np.searchsorted(ls, res.slots)] = res.w
+        else:
+            applied = np.asarray(res)
+        fresh = self.policy.allocate(st.dense_view(ls), self.cluster,
+                                     self.now)
+        assert np.array_equal(applied, fresh), (
+            f"{self.policy.spec}: delta-applied {applied.tolist()} != "
+            f"fresh dense {fresh.tolist()} at n={st.n} now={self.now}")
+        st.w[ls] = applied
 
     def arrive(self, epochs: float, max_w: int) -> None:
         spec = JobSpec(job_id=self.n_added, arrival=0.0, epochs=epochs,
                        max_w=max_w)
         self.n_added += 1
-        self.st.add(spec, spec.speed_table(self.cluster), None)
+        self.st.add(spec, spec.speed_table(self.cluster),
+                    self.now if self.policy.explores else None)
 
-    def run_some(self, fractions) -> None:
-        """Advance a subset of the granted jobs (ungranted/frozen jobs
-        keep their remaining work — the incremental heaps must treat
-        them as clean)."""
+    def run_some(self, fractions, dt: float) -> None:
+        """Advance the clock and a subset of the granted jobs
+        (ungranted/frozen jobs keep their remaining work — the
+        incremental heaps must treat them as clean)."""
+        self.now += dt
         st = self.st
-        granted = np.nonzero(self.target > 0)[0]
-        for k, frac in zip(granted, fractions):
+        granted = st.live_slots()
+        granted = granted[st.w[granted] > 0]
+        for s, frac in zip(granted.tolist(), fractions):
             if frac > 0.0:
-                i = st.start + int(k)
-                st.remaining[i] = max(st.remaining[i] * (1.0 - frac), 1e-6)
+                st.remaining[s] = max(st.remaining[s] * (1.0 - frac), 1e-6)
 
     def complete(self, which: int) -> None:
         st = self.st
         if st.n == 0:
             return
-        st.remove([st.start + (which % st.n)])
+        ls = st.live_slots()
+        st.remove([int(ls[which % len(ls)])])
 
     def step(self, op) -> None:
         kind = op[0]
         if kind == "arrive":
             self.arrive(op[1], op[2])
         elif kind == "run":
-            self.run_some(op[1])
+            self.run_some(op[1], op[2])
         else:
             self.complete(op[1])
         if self.st.n:
             self.solve_and_check()
 
 
-INCREMENTAL_SPECS = ("precompute", "optimus", "srtf", "pack_srtf")
+# Every registered policy rides the harness — the sparse-delta contract
+# is registry-wide, not a per-policy opt-in to the tests.
+INCREMENTAL_SPECS = tuple(sched.registered_policies().values())
 
 
 def _op_strategy():
@@ -111,7 +127,9 @@ def _op_strategy():
                         hst.sampled_from([1, 2, 4, 8, 16, 64]))
     run = hst.tuples(hst.just("run"),
                      hst.lists(hst.floats(min_value=0.0, max_value=0.9),
-                               min_size=0, max_size=CAPACITY))
+                               min_size=0, max_size=CAPACITY),
+                     hst.floats(min_value=0.0, max_value=400.0,
+                                allow_nan=False))
     complete = hst.tuples(hst.just("complete"),
                           hst.integers(min_value=0, max_value=10 ** 6))
     return hst.lists(arrive | run | complete, min_size=1, max_size=60)
@@ -120,16 +138,17 @@ def _op_strategy():
 @settings(max_examples=80, deadline=None)
 @given(spec=hst.sampled_from(INCREMENTAL_SPECS), ops=_op_strategy(),
        seed=hst.integers(min_value=0, max_value=2 ** 16))
-def test_incremental_equals_fresh_property(spec, ops, seed):
-    """Any arrival/run/freeze/completion sequence: the persistent-heap
-    solve is allocation-identical to a fresh-heap solve at every tick."""
+def test_delta_equals_dense_property(spec, ops, seed):
+    """Any arrival/run/freeze/completion sequence: the slotted sparse
+    delta, applied to the engine-held state, is allocation-identical to
+    a fresh dense solve at every tick — for every registered policy."""
     h = _Harness(spec, seed)
     for op in ops:
         h.step(op)
 
 
 @pytest.mark.parametrize("spec", INCREMENTAL_SPECS)
-def test_incremental_equals_fresh_fuzz(spec):
+def test_delta_equals_dense_fuzz(spec):
     """Deterministic fuzz twin of the property test (runs without
     hypothesis): 2000 random ticks per policy."""
     rng = np.random.default_rng(hash(spec) % 2 ** 31)
@@ -141,7 +160,8 @@ def test_incremental_equals_fresh_fuzz(spec):
                     int(rng.choice([1, 2, 4, 8, 16, 64]))))
         elif r < 0.8:
             h.step(("run", rng.uniform(0.0, 0.9,
-                                       size=rng.integers(0, CAPACITY))))
+                                       size=rng.integers(0, CAPACITY)),
+                    float(rng.uniform(0.0, 400.0))))
         else:
             h.step(("complete", int(rng.integers(0, 10 ** 6))))
 
@@ -149,16 +169,34 @@ def test_incremental_equals_fresh_fuzz(spec):
 def test_incremental_survives_deep_queues():
     """More jobs than capacity: queued (w=0) jobs are clean across ticks
     and the prefix rotates as head jobs complete — the regime the
-    persistent heaps exist for."""
+    persistent heaps and the saturation shortcut exist for."""
     for spec in INCREMENTAL_SPECS:
         h = _Harness(spec, 3)
         for j in range(4 * CAPACITY):
             h.arrive(100.0 + j, 8)
         h.solve_and_check()
         for _ in range(3 * CAPACITY):
-            h.run_some(np.full(CAPACITY, 0.5))
+            h.run_some(np.full(CAPACITY, 0.5), 150.0)
             h.solve_and_check()
-            h.complete(0)           # head completion: window advances
+            h.complete(0)           # head completion: lo advances
+            if h.st.n:
+                h.solve_and_check()
+
+
+def test_interior_completions_deep_queue():
+    """Interior (non-head) completions against a deep queue — SRTF's
+    adversarial shape for the old min-side shift; now O(1) per death
+    plus prefix patching, and allocations must stay delta-exact while
+    the prefix refills from the next-live chain."""
+    for spec in INCREMENTAL_SPECS:
+        h = _Harness(spec, 9)
+        for j in range(4 * CAPACITY):
+            h.arrive(50.0 + 3 * j, 8)
+        h.solve_and_check()
+        for k in range(3 * CAPACITY):
+            h.run_some(np.full(CAPACITY, 0.3), 150.0)
+            h.solve_and_check()
+            h.complete(5 + (k % CAPACITY))      # mid-prefix death
             if h.st.n:
                 h.solve_and_check()
 
@@ -233,7 +271,7 @@ def test_calendar_queue_matches_heapq():
 
 
 # --------------------------------------------------------------------------
-# Windowed removal.
+# Slot-stable removal: live order, next-live chain, FIFO prefix cache.
 # --------------------------------------------------------------------------
 
 def _fill(n):
@@ -247,29 +285,45 @@ def _fill(n):
 
 
 def _live_ids(st):
-    return st.ids[st.start:st.start + st.n].tolist()
+    return st.ids[st.live_slots()].tolist()
 
 
-def _check_pos(st):
-    for rel in range(st.n):
-        i = st.start + rel
-        assert st.pos_of_seq[st.seq[i]] == i
+def _check_invariants(st):
+    ls = st.live_slots()
+    assert st.n == len(ls)
+    assert int(st.alive[:st.hi].sum()) == st.n
+    if st.n:
+        assert st.lo == int(ls[0])
+        assert st.alive[st.lo]
+    else:
+        assert st.lo == st.hi or not st.alive[st.lo:st.hi].any()
+    # the FIFO prefix cache is exactly the first min(n, pref_cap) live
+    # slots, and _prefix slices it without a live scan
+    want = ls[:min(st.n, st.pref_cap)].tolist()
+    assert st.pref == want
+    if want:
+        assert st._prefix(len(want)).tolist() == want
+    # the next-live chain finds every live successor
+    for s in range(st.lo, st.hi):
+        if st.alive[s]:
+            assert st._find(s) == s
 
 
 @pytest.mark.parametrize("gone_rel, want", [
-    ([0], [1, 2, 3, 4, 5, 6, 7]),            # head -> window advance
+    ([0], [1, 2, 3, 4, 5, 6, 7]),            # head -> lo advances
     ([0, 1, 2], [3, 4, 5, 6, 7]),            # head block
-    ([1], [0, 2, 3, 4, 5, 6, 7]),            # near head -> right shift
-    ([6], [0, 1, 2, 3, 4, 5, 7]),            # near tail -> left shift
+    ([1], [0, 2, 3, 4, 5, 6, 7]),            # interior near head
+    ([6], [0, 1, 2, 3, 4, 5, 7]),            # interior near tail
     ([7], [0, 1, 2, 3, 4, 5, 6]),            # tail
     ([1, 4, 6], [0, 2, 3, 5, 7]),            # batch
     ([0, 1, 2, 3, 4, 5, 6, 7], []),          # everything
 ])
-def test_remove_preserves_order_and_positions(gone_rel, want):
+def test_remove_preserves_order_and_prefix(gone_rel, want):
     st = _fill(8)
-    st.remove([st.start + g for g in gone_rel])
+    ls = st.live_slots()
+    st.remove([int(ls[g]) for g in gone_rel])
     assert _live_ids(st) == want
-    _check_pos(st)
+    _check_invariants(st)
 
 
 def test_remove_fuzz_against_list_model():
@@ -283,7 +337,8 @@ def test_remove_fuzz_against_list_model():
         if model and rng.random() < 0.55:
             k = int(rng.integers(1, min(4, len(model)) + 1))
             rel = sorted(rng.choice(len(model), size=k, replace=False))
-            st.remove([st.start + int(r) for r in rel])
+            ls = st.live_slots()
+            st.remove([int(ls[int(r)]) for r in rel])
             for r in reversed(rel):
                 del model[int(r)]
         else:
@@ -292,4 +347,18 @@ def test_remove_fuzz_against_list_model():
             model.append(next_id)
             next_id += 1
         assert _live_ids(st) == model
-        _check_pos(st)
+        _check_invariants(st)
+
+
+def test_prefix_refills_past_dead_runs():
+    """Kill a long dead run just past the prefix tail: the refill must
+    hop it through the compressed next-live chain, not scan."""
+    st = _fill(40)
+    ls = st.live_slots()
+    # kill slots 16..31 (outside the 16-wide prefix), then a prefix slot
+    st.remove([int(s) for s in ls[16:32]])
+    _check_invariants(st)
+    st.remove([int(st.live_slots()[3])])
+    _check_invariants(st)
+    # prefix refilled with slot 32 (first live past the dead run)
+    assert st.pref[-1] == 32
