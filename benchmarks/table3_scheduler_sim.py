@@ -72,6 +72,24 @@ def run(seed: int = 0):
     return run_table3(seed=seed)
 
 
+def run_decision_counters(seed: int = 0) -> dict[str, dict[str, int]]:
+    """Per-strategy decision counters on the paper's moderate trace:
+    solver effort (solve reuse rate, heap traffic) behind each Table-3
+    column, collected with counters-only telemetry — the trajectory is
+    bit-identical to the uninstrumented sweep (gated by the parity
+    suite)."""
+    from repro.core import telemetry
+    from repro.core.jobs import make_workload
+    from repro.core.simulator import simulate
+
+    jobs = make_workload("poisson", 114, 500.0, seed)
+    out = {}
+    for strat in TABLE3_STRATEGIES:
+        res = simulate(jobs, 64, strat, telemetry=telemetry.Telemetry())
+        out[strat] = res.telemetry.counters
+    return out
+
+
 def run_patterns(seed: int = 0) -> dict[str, dict[str, float]]:
     """Moderate-contention Table-3 row per workload pattern."""
     out = {}
@@ -145,6 +163,12 @@ def main(csv=print):
             f"srtf={row['srtf'] / row['pack_srtf']:.2f}x;"
             f"precompute="
             f"{row['precompute'] / row['pack_precompute']:.2f}x")
+    # per-strategy decision counters (telemetry layer): the solver-effort
+    # story behind the JCT columns — e.g. solve.reused / solve.calls is
+    # the cross-tick reuse rate the incremental core banks on
+    for strat, ctrs in run_decision_counters().items():
+        kv = ";".join(f"{k}={v}" for k, v in sorted(ctrs.items()))
+        csv(f"table3/decision_counters/{strat},0,{kv}")
     return ours
 
 

@@ -83,6 +83,32 @@ def collective_mix(recs, mesh="16x16"):
             print(f"| {arch} | {shape} | {cells} |")
 
 
+SCHED_DIR = os.path.join(os.path.dirname(__file__), "scheduler")
+
+
+def scheduler_rollup_table(sched_dir=SCHED_DIR):
+    """§Scheduler telemetry: one row per metrics-rollup JSON dropped in
+    experiments/scheduler/ (written by ``examples/scheduler_sim.py
+    --rollup-out`` or any ``TelemetryResult.rollup()`` dump)."""
+    files = sorted(glob.glob(os.path.join(sched_dir, "*.json")))
+    if not files:
+        return
+    print("\n### Scheduler telemetry rollups\n")
+    print("| run | policy | jobs | makespan h | util | avg JCT h | "
+          "queue peak | rejected | migrations |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for fn in files:
+        r = json.load(open(fn))
+        util = r.get("utilization")
+        print(f"| {os.path.splitext(os.path.basename(fn))[0]} "
+              f"| {r.get('policy', '?')} | {r.get('n_jobs', 0)} "
+              f"| {r.get('makespan', 0.0)/3600.0:.2f} "
+              f"| {'—' if util is None else f'{util:.3f}'} "
+              f"| {r.get('avg_jct_s', 0.0)/3600.0:.2f} "
+              f"| {r.get('queue_peak', 0)} | {r.get('n_rejected', 0)} "
+              f"| {r.get('n_migrations', 0)} |")
+
+
 if __name__ == "__main__":
     recs = load()
     sys.stderr.write(f"{len(recs)} records\n")
@@ -90,3 +116,4 @@ if __name__ == "__main__":
     roofline_table(recs, "16x16")
     roofline_table(recs, "2x16x16")
     collective_mix(recs)
+    scheduler_rollup_table()

@@ -37,12 +37,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from time import perf_counter
 from typing import Sequence
 
 import numpy as np
 
 from repro.collectives.cost import ClusterModel
 from repro.core import scheduler as sched
+from repro.core import telemetry as _tele
 from repro.core.jobs import JobSpec
 from repro.core.scheduler import (Alloc, EXPLORE_SEGMENT, EXPLORE_WS,
                                   JobTuple, RESCHEDULE_EVERY, _caps,
@@ -240,12 +242,16 @@ _SEED_POLICIES = (sched.DoublingPolicy, sched.ExploratoryPolicy,
 
 
 def simulate_reference(jobs: list[JobSpec], cluster: ClusterModel,
-                       policy: sched.SchedulingPolicy):
+                       policy: sched.SchedulingPolicy,
+                       tel: object = _tele.NULL):
     """The pre-table event loop — the trajectory oracle.
 
     Must stay behaviorally identical to the SoA engine
     (``simulator._simulate_table``), asserted by tests and
-    benchmarks/bench_scheduler.py.
+    benchmarks/bench_scheduler.py.  Telemetry events mirror the fast
+    engine's: the emitted *set* per timestamp is identical (trajectory
+    parity), so the metrics rollup — an order-insensitive integral over
+    ``dt > 0`` spans — is bitwise-equal between engines.
     """
     from repro.core.simulator import SimResult
 
@@ -256,6 +262,14 @@ def simulate_reference(jobs: list[JobSpec], cluster: ClusterModel,
     if cluster.placement is not None:
         from repro.core.placement import PlacementEngine
         peng = PlacementEngine(cluster)
+    rec = tel.recorder(policy.spec, capacity, len(jobs),
+                       cluster.gpus_per_node or 0)
+    rec_on = rec.on
+    # solve-timer handle hoisted out of the event loop (bound method:
+    # one call per reallocation instead of two attribute chases + call)
+    t_solve_add = rec.t_solve.add if rec_on else None
+    if peng is not None:
+        peng.rec = rec
     pending = sorted(jobs, key=lambda j: j.arrival)
     active: list[_Active] = []
     done: dict[int, float] = {}
@@ -291,17 +305,35 @@ def simulate_reference(jobs: list[JobSpec], cluster: ClusterModel,
                 cluster, now)
             target = {a.spec.job_id: int(w) for a, w in zip(active, soa)}
         if peng is None:
+            if rec_on:
+                nchg = sum(1 for a in active
+                           if target.get(a.spec.job_id, 0) != a.w)
+                if nchg:
+                    rec.solve(now, nchg, False, len(active))
+                else:
+                    rec.solve_reused()
             for a in active:
                 w_new = target.get(a.spec.job_id, 0)
                 if w_new != a.w:
+                    if rec_on:
+                        rec.alloc(now, a.spec.job_id, a.w, w_new)
                     a.w = w_new
                     if w_new > 0:
                         a.frozen_until = now + cluster.restart_cost
+                        if rec_on:
+                            rec.freeze(now, a.spec.job_id, a.frozen_until)
             return
         ids = [a.spec.job_id for a in active]
         tvec = [target.get(jid, 0) for jid in ids]
         changed = [i for i, a in enumerate(active) if tvec[i] != a.w]
-        upd, factors, spans = peng.apply(ids, tvec, changed)
+        if rec_on:
+            if changed:
+                rec.solve(now, len(changed), False, len(active))
+            else:
+                rec.solve_reused()
+            for i in changed:
+                rec.alloc(now, active[i].spec.job_id, active[i].w, tvec[i])
+        upd, factors, spans = peng.apply(ids, tvec, changed, now)
         for i, a in enumerate(active):
             a.w = tvec[i]
         for pos, f, sp in zip(upd.tolist(), factors.tolist(),
@@ -311,6 +343,8 @@ def simulate_reference(jobs: list[JobSpec], cluster: ClusterModel,
             a.spans = sp
             if a.w > 0:
                 a.frozen_until = now + cluster.restart_cost
+                if rec_on:
+                    rec.freeze(now, a.spec.job_id, a.frozen_until)
         # also freeze explore-phase jobs at segment switches implicitly via
         # reschedule events (RESCHEDULE_EVERY == EXPLORE_SEGMENT).
 
@@ -360,6 +394,8 @@ def simulate_reference(jobs: list[JobSpec], cluster: ClusterModel,
             active.remove(a)
             if peng is not None:
                 peng.release(a.spec.job_id)
+            if rec_on:
+                rec.complete(now, a.spec.job_id)
 
         # --- arrivals ----------------------------------------------------
         arrived = False
@@ -370,8 +406,12 @@ def simulate_reference(jobs: list[JobSpec], cluster: ClusterModel,
                 if verdict == "admit":
                     _admit(j, now)
                     arrived = True
+                    if rec_on:
+                        rec.admit(now, j.job_id)
                 elif verdict == "reject":
                     rejected.append(j.job_id)
+                    if rec_on:
+                        rec.reject(now, j.job_id)
                 else:
                     still.append(j)
             if still and not arrived and not active and not pending:
@@ -381,26 +421,40 @@ def simulate_reference(jobs: list[JobSpec], cluster: ClusterModel,
             delayed = still
         while pending and pending[0].arrival <= now + 1e-9:
             j = pending.pop(0)
+            if rec_on:
+                rec.submit(now, j.job_id, j.arrival)
             if peng is not None:
                 verdict = peng.admit(j, len(active), len(delayed), now)
                 if verdict == "delay":
                     delayed.append(j)
+                    if rec_on:
+                        rec.delay(now, j.job_id)
                     continue
                 if verdict == "reject":
                     rejected.append(j.job_id)
+                    if rec_on:
+                        rec.reject(now, j.job_id)
                     continue
             _admit(j, now)
             arrived = True
+            if rec_on:
+                rec.admit(now, j.job_id)
 
         peak = max(peak, len(active))
 
         # --- reallocation ------------------------------------------------
         if arrived or finished or now + 1e-9 >= next_resched:
             if active:
-                apply_alloc(now)
+                if rec_on:
+                    _t0 = perf_counter()
+                    apply_alloc(now)
+                    t_solve_add(perf_counter() - _t0)
+                else:
+                    apply_alloc(now)
             next_resched = now + RESCHEDULE_EVERY
 
     return SimResult(strategy=policy.spec, completion_times=done,
                      arrival_times=arrivals, peak_concurrency=peak,
                      rejected=tuple(rejected),
-                     migrations=0 if peng is None else peng.migrations)
+                     migrations=0 if peng is None else peng.migrations,
+                     telemetry=rec.finish(now))

@@ -47,6 +47,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.core import telemetry as _tele
 from repro.collectives.cost import (ClusterModel, HardwareCoefficients,
                                     NodeSpec)
 from repro.core.scheduler import _int_param, _no_param, _split_spec
@@ -399,6 +400,9 @@ class PlacementEngine:
         self.admission = get_admission(cluster.admission)
         self.spec_of: dict[int, object] = {}
         self.migrations = 0
+        # telemetry recorder (set by the engines when telemetry is on);
+        # the no-op singleton keeps the defrag pass unconditional
+        self.rec = _tele.NULL_RECORDER
         # (sorted node ids, spans) -> effective HardwareCoefficients
         self._hw_cache: dict = {}
         self._uniform_hw = all(n.hw is None or n.hw == cluster.hw
@@ -429,7 +433,7 @@ class PlacementEngine:
 
     # -- the per-event placement pass --------------------------------------
 
-    def apply(self, ids, target, changed):
+    def apply(self, ids, target, changed, now: float = 0.0):
         """Re-place changed gangs, run the defrag pass, and report.
 
         ``ids``/``target`` are the active set (ids and new worker counts,
@@ -439,6 +443,8 @@ class PlacementEngine:
         (changed plus migrated), each with its new placement factor and
         actual spanning flag.  Factors multiply the *flat* speed table —
         exactly 1.0 for a non-spanning gang on default-hardware nodes.
+        ``now`` is the simulated time, only used to timestamp telemetry
+        migrate events.
         """
         st = self.state
         for pos in changed:
@@ -448,7 +454,7 @@ class PlacementEngine:
             if w > 0:
                 jid = int(ids[pos])
                 st.assign(Placement(jid, self.strategy.place(st, w)))
-        moved = self._defrag(ids) if self.cluster.defrag else ()
+        moved = self._defrag(ids, now) if self.cluster.defrag else ()
         upd = sorted(set(changed) | set(moved))
         factors = np.ones(len(upd))
         spans = np.zeros(len(upd), bool)
@@ -461,7 +467,7 @@ class PlacementEngine:
     def release(self, job_id: int) -> None:
         self.state.release(job_id)
 
-    def _defrag(self, ids) -> list[int]:
+    def _defrag(self, ids, now: float = 0.0) -> list[int]:
         """Single consolidation pass in active-list order: a spanning
         gang that now fits on one node moves to the *fastest* such node
         (its own GPUs there count as available; ties broken tightest
@@ -494,6 +500,8 @@ class PlacementEngine:
                 st.assign(Placement(jid, ((best, w),)))
                 self.migrations += 1
                 moved.append(pos)
+                if self.rec.on:
+                    self.rec.migrate(now, jid, best)
         return moved
 
     # -- placement-dependent speed -----------------------------------------

@@ -417,7 +417,7 @@ class IncrementalContext:
     """
 
     __slots__ = ("alive", "prefix", "pref_version", "store", "_scratch",
-                 "_ones")
+                 "_ones", "tel")
 
     def __init__(self):
         self.alive: np.ndarray | None = None
@@ -429,6 +429,9 @@ class IncrementalContext:
         self.store: dict[str, object] = {}
         self._scratch = np.empty(0, np.int64)
         self._ones = np.empty(0, np.int64)
+        # telemetry counter registry (``telemetry.Registry``) or None
+        # when telemetry is off — solvers count heap ops only when set
+        self.tel = None
 
     def scratch(self, n: int) -> np.ndarray:
         """A reused int64 buffer of length ``n`` (contents arbitrary)."""
@@ -463,7 +466,8 @@ class _StampedGainHeap:
     touching the heap at all.
     """
 
-    __slots__ = ("last_q", "stamp", "base", "sat_key")
+    __slots__ = ("last_q", "stamp", "base", "sat_key",
+                 "_tel_src", "_c_push", "_c_pop", "_c_dirty", "_c_reb")
 
     def __init__(self):
         self.last_q = np.full(64, np.nan)
@@ -472,6 +476,16 @@ class _StampedGainHeap:
         # (pref_version, n1) memo of the last saturated all-ones delta
         # (see _SatCache for why it never needs clearing)
         self.sat_key: tuple[int, int] | None = None
+        # telemetry counter handles, bound once per registry: the solve
+        # path flushes with plain attribute bumps instead of dict lookups
+        self._tel_src = None
+
+    def _tel_bind(self, tel) -> None:
+        self._tel_src = tel
+        self._c_push = tel.counter("heap.pushes")
+        self._c_pop = tel.counter("heap.pops")
+        self._c_dirty = tel.counter("heap.dirty_rows")
+        self._c_reb = tel.counter("heap.rebuilds")
 
     def _grow_to(self, m: int) -> None:
         self.last_q = _grow_array(self.last_q, m, np.nan)
@@ -496,6 +510,11 @@ class _StampedGainHeap:
         dirty = np.nonzero(self.last_q[P] != q)[0]
         if not len(dirty):
             return
+        tel = state.inc.tel if state.inc is not None else None
+        if tel is not None:
+            if tel is not self._tel_src:
+                self._tel_bind(tel)
+            self._c_dirty.n += len(dirty)
         rebuild = 2 * len(dirty) >= n1
         if rebuild:
             dirty = np.arange(n1)
@@ -523,11 +542,17 @@ class _StampedGainHeap:
             outside.difference_update(dslots.tolist())
             for s in outside:
                 self.last_q[s] = np.nan
+            if tel is not None:
+                self._c_reb.n += 1
+                self._c_push.n += len(self.base)
             return
         base = self.base
+        n0 = len(base)
         for g, s, mw, stm in zip(gains, dslots.tolist(), caps_d, stamps):
             if g > 0.0 and 2 <= mw:
                 heapq.heappush(base, (-g, s, 1, stm))
+        if tel is not None:
+            self._c_push.n += len(base) - n0
 
     def _maybe_compact(self, ctx: IncrementalContext, n1: int) -> None:
         if len(self.base) <= 4 * n1 + 64:
@@ -579,6 +604,8 @@ class _PersistentDoublingHeap(_StampedGainHeap):
         self._refresh(state, P)
         self._maybe_compact(ctx, n1)
         heap = self.base.copy()       # a copy of a heap is a heap
+        n0 = len(heap)
+        pops = 0
         used = n1
         stamp = self.stamp
         pos_in = {s: i for i, s in enumerate(P.tolist())}
@@ -588,6 +615,7 @@ class _PersistentDoublingHeap(_StampedGainHeap):
         clamp = state.max_w_clamp
         while heap:
             neg_g, s, w, stm = heapq.heappop(heap)
+            pops += 1
             if stamp[s] != stm:
                 continue              # job ran since this entry was pushed
             idx = pos_in.get(s)
@@ -610,6 +638,12 @@ class _PersistentDoublingHeap(_StampedGainHeap):
                      - gq / max(float(table[2 * w2]), 1e-12)) / w2
                 if g > 0.0:
                     heapq.heappush(heap, (-g, s, w2, stm))
+        tel = ctx.tel
+        if tel is not None:
+            if tel is not self._tel_src:
+                self._tel_bind(tel)
+            self._c_pop.n += pops
+            self._c_push.n += len(heap) + pops - n0
         return AllocDelta(P, np.array(head, np.int64))
 
 
@@ -635,6 +669,8 @@ class _PersistentOptimusHeap(_StampedGainHeap):
         self._refresh(state, P)
         self._maybe_compact(ctx, n1)
         heap = self.base.copy()
+        n0 = len(heap)
+        pops = 0
         used = n1
         stamp = self.stamp
         pos_in = {s: i for i, s in enumerate(P.tolist())}
@@ -644,6 +680,7 @@ class _PersistentOptimusHeap(_StampedGainHeap):
         clamp = state.max_w_clamp
         while used < capacity and heap:
             neg_g, s, w, stm = heapq.heappop(heap)
+            pops += 1
             if stamp[s] != stm:
                 continue
             idx = pos_in.get(s)
@@ -664,6 +701,12 @@ class _PersistentOptimusHeap(_StampedGainHeap):
                      - gq / max(float(table[w1 + 1]), 1e-12))
                 if g > 0.0:
                     heapq.heappush(heap, (-g, s, w1, stm))
+        tel = ctx.tel
+        if tel is not None:
+            if tel is not self._tel_src:
+                self._tel_bind(tel)
+            self._c_pop.n += pops
+            self._c_push.n += len(heap) + pops - n0
         return AllocDelta(P, np.array(head, np.int64))
 
 
@@ -694,7 +737,7 @@ class _PersistentSRTFHeap:
 
     __slots__ = ("f_best", "w_star", "stamp", "caps", "heap", "winners",
                  "seen", "rowcache", "_prev_np", "_prev_fnp", "_cap_left",
-                 "_prev_deaths")
+                 "_prev_deaths", "_tel_src", "_c_push", "_c_pop")
 
     def __init__(self):
         # per-slot state as plain Python lists: every access is a scalar
@@ -719,6 +762,11 @@ class _PersistentSRTFHeap:
         # runs)
         self._prev_np = _EMPTY_DELTA_ARR
         self._prev_fnp = np.empty(0)
+        # telemetry counter handles, bound once per registry (solve is
+        # the hottest policy path: flushes are plain attribute bumps)
+        self._tel_src = None
+        self._c_push = None
+        self._c_pop = None
         self._cap_left = 1
         # slot-space dead count (hi - n_live) at the last solve: if it
         # has not moved, no row was removed since, so every winner is
@@ -800,6 +848,13 @@ class _PersistentSRTFHeap:
         if steady and self.seen >= state.hi:
             return _delta_empty()
         heap = self.heap
+        tel = ctx.tel
+        if tel is not None and tel is not self._tel_src:
+            self._tel_src = tel
+            self._c_push = tel.counter("heap.pushes")
+            self._c_pop = tel.counter("heap.pops")
+        n_push = 0
+        n_pop = 0
         # a new arrival can only change the outcome if it beats the last
         # winner (new slots sort after every winner slot on ties) —
         # *and* there was no spare capacity it could claim outright
@@ -825,11 +880,14 @@ class _PersistentSRTFHeap:
                 if tb < t_last:
                     new_lose = False
                 heapq.heappush(heap, (tb, s, stm))
+                n_push += 1
             self.seen = state.hi
         if new_lose:
             # deep-backlog arrival: every new job sorts behind the
             # still-valid winner sequence and the cluster was already
             # spent — the fresh pop order is provably unchanged
+            if tel is not None and n_push:
+                self._c_push.n += n_push
             return _delta_empty()
         # Last tick's winners never sit in the big heap between solves —
         # re-pushing and re-popping them every solve costs ~2 log n heap
@@ -858,17 +916,20 @@ class _PersistentSRTFHeap:
                 if stamp[sh] == stm and alive[sh]:
                     break
                 heapq.heappop(heap)
+                n_pop += 1
             if ci < nc:
                 tc, sc = cands[ci]
                 if heap and (th < tc or (th == tc and sh < sc)):
                     s = sh
                     heapq.heappop(heap)
+                    n_pop += 1
                 else:
                     s = sc
                     ci += 1
             elif heap:
                 s = sh
                 heapq.heappop(heap)
+                n_pop += 1
             else:
                 break
             cap_i = caps_l[s]
@@ -888,6 +949,12 @@ class _PersistentSRTFHeap:
             stm = stamp[sc] + 1
             stamp[sc] = stm
             heapq.heappush(heap, (tc, sc, stm))
+            n_push += 1
+        if tel is not None:
+            if n_push:
+                self._c_push.n += n_push
+            if n_pop:
+                self._c_pop.n += n_pop
         self.winners = winners
         fb = self.f_best
         self._prev_np = np.fromiter(winners, np.int64, len(winners))
@@ -1538,8 +1605,11 @@ class UtilityGreedyPolicy(SchedulingPolicy):
                 if g > 0.0:
                     heap.append((-g, i, 1))
         heapq.heapify(heap)
+        n_push = len(heap)
+        n_pop = 0
         while heap:
             neg_g, idx, w = heapq.heappop(heap)
+            n_pop += 1
             if head[idx] != w:
                 continue                  # stale: job already doubled past w
             if used + w > capacity:
@@ -1552,6 +1622,11 @@ class UtilityGreedyPolicy(SchedulingPolicy):
                 g = (float(table[2 * w2]) - float(table[w2])) / w2
                 if g > 0.0:
                     heapq.heappush(heap, (-g, idx, w2))
+                    n_push += 1
+        tel = state.inc.tel if state.inc is not None else None
+        if tel is not None:
+            tel.counter("heap.pushes").inc(n_push)
+            tel.counter("heap.pops").inc(n_pop)
         if slotted:
             return AllocDelta(P, np.array(head, np.int64))
         out[:n1] = head

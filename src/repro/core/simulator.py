@@ -88,11 +88,13 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import math
+from time import perf_counter
 
 import numpy as np
 
 from repro.collectives.cost import ClusterModel
 from repro.core import _reference, scheduler as sched
+from repro.core import telemetry as _tele
 from repro.core.jobs import JobSpec
 # Shared §6/§7 constants (the explore schedule is policy-owned now);
 # re-exported here because callers historically read them off this module.
@@ -116,12 +118,27 @@ class SimResult:
     # arrivals the admission rule turned away, and defrag gang moves
     rejected: tuple[int, ...] = ()
     migrations: int = 0
+    # end-of-run metrics rollup (``telemetry.TelemetryResult``) when the
+    # run was telemetered (``simulate(..., telemetry=...)``), else None
+    telemetry: object | None = None
 
     @property
     def avg_jct_hours(self) -> float:
         jcts = [self.completion_times[j] - self.arrival_times[j]
                 for j in self.completion_times]
         return float(np.mean(jcts)) / 3600.0
+
+    @property
+    def utilization(self) -> float | None:
+        """Time-weighted mean busy-GPU fraction over the run.
+
+        Allocated GPUs count as busy — a frozen (restarting) gang still
+        holds its GPUs.  Computed from the telemetry event integrals, so
+        it is ``None`` unless the run was telemetered; both engines
+        produce bitwise-equal values (asserted by the parity gates).
+        """
+        t = self.telemetry
+        return None if t is None else t.utilization
 
 
 def _allocate(strategy: str, active: list[_Active], capacity: int,
@@ -146,7 +163,8 @@ _allocate_table = _allocate
 def simulate(jobs: list[JobSpec], capacity: int | None = None,
              strategy: str | sched.SchedulingPolicy = "precompute",
              engine: str = "table",
-             cluster: ClusterModel | None = None) -> SimResult:
+             cluster: ClusterModel | None = None,
+             telemetry: object | None = None) -> SimResult:
     """Simulate ``jobs`` on a cluster under a scheduling policy.
 
     ``strategy`` is a registry spec string (``"precompute"``,
@@ -155,6 +173,13 @@ def simulate(jobs: list[JobSpec], capacity: int | None = None,
     many GPUs — the paper's setup; default 64) or ``cluster`` (a full
     :class:`ClusterModel` with topology, contention and restart cost) —
     passing both with disagreeing sizes is an error, not a silent pick.
+
+    ``telemetry`` is a :class:`repro.core.telemetry.Telemetry` handle to
+    record the run (events, counters, utilization — attached to
+    ``SimResult.telemetry``); ``None`` (the default) runs the
+    zero-overhead disabled path and leaves ``SimResult.telemetry`` None.
+    The trajectory is bit-identical either way (gated by the parity
+    suite).
     """
     if cluster is None:
         cluster = ClusterModel(capacity=64 if capacity is None else capacity)
@@ -168,10 +193,11 @@ def simulate(jobs: list[JobSpec], capacity: int | None = None,
     # job gets the all-or-nothing 0 grant forever and the event loop
     # would tick on reschedules for eternity)
     policy.validate(cluster)
+    tel = _tele.NULL if telemetry is None else telemetry
     if engine == "table":
-        return _simulate_table(jobs, cluster, policy)
+        return _simulate_table(jobs, cluster, policy, tel)
     if engine == "reference":
-        return _reference.simulate_reference(jobs, cluster, policy)
+        return _reference.simulate_reference(jobs, cluster, policy, tel)
     raise ValueError(f"unknown engine {engine!r}")
 
 
@@ -478,7 +504,8 @@ class _SoAState:
 
 
 def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
-                    policy: sched.SchedulingPolicy) -> SimResult:
+                    policy: sched.SchedulingPolicy,
+                    tel: object = _tele.NULL) -> SimResult:
     capacity = cluster.capacity
     restart_cost = cluster.restart_cost
     penalty = cluster.contention_penalty
@@ -490,6 +517,17 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
     n_jobs = len(pending)
     pi = 0                        # next-arrival cursor into `pending`
     st = _SoAState(table_width=capacity + 1)
+    # telemetry: one recorder per run; hot paths pay a single ``rec_on``
+    # check when disabled (``rec`` is the module no-op singleton then)
+    rec = tel.recorder(policy.spec, capacity, n_jobs,
+                       getattr(cluster, "gpus_per_node", 0) or 0)
+    rec_on = rec.on
+    # solve-timer handle hoisted out of the event loop (bound method:
+    # one call per reallocation instead of two attribute chases + call)
+    t_solve_add = rec.t_solve.add if rec_on else None
+    st.ctx.tel = rec.registry
+    if peng is not None:
+        peng.rec = rec
     done: dict[int, float] = {}
     arrivals = {j.job_id: j.arrival for j in jobs}
     delayed: list[JobSpec] = []   # admission-delayed, retried every event
@@ -640,21 +678,34 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
                 # identifies the set: any membership change moves one.
                 key = (st.hi, len(done))
                 if key == static_key:
+                    if rec_on:
+                        rec.solve_reused()
                     return
                 static_key = key
             delta = p_allocate(st_view(None), cluster, now)
             tslots, tw = delta.slots, delta.w
             if not len(tslots):
+                if rec_on:
+                    rec.solve_reused()
                 return
             cur = st.w[tslots]
             chm = tw != cur
             if not chm.any():
+                if rec_on:
+                    rec.solve_reused()
                 return
             gs = tslots[chm]
             wn = tw[chm]
+            gs_l = gs.tolist()
+            wn_l = wn.tolist()
+            if rec_on:
+                rec.solve(now, len(gs_l), False, st.n)
+                for jid, ov, nv in zip(st.ids[gs].tolist(),
+                                       cur[chm].tolist(), wn_l):
+                    rec.alloc(now, jid, ov, nv)
             st.w[gs] = wn
             st.speed_now[gs] = st.tables[st.rows[gs], wn]
-            for s, wv in zip(gs.tolist(), wn.tolist()):
+            for s, wv in zip(gs_l, wn_l):
                 if wv > 0:
                     run_set.add(s)
                 else:
@@ -677,17 +728,37 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
             changed = np.nonzero(target != st.w[ls])[0]
             if peng is None:
                 if not len(changed):
+                    if rec_on:
+                        rec.solve_reused()
                     return
                 gi = ls[changed]
+                if rec_on:
+                    rec.solve(now, len(changed), False, st.n)
+                    ids_ = st.ids
+                    oldw = st.w[gi].tolist()
+                    for s, ov, nv in zip(gi.tolist(), oldw,
+                                         target[changed].tolist()):
+                        rec.alloc(now, int(ids_[s]), ov, nv)
                 st.w[gi] = target[changed]
                 st.speed_now[gi] = st.tables[st.rows[gi], target[changed]]
                 started = gi[target[changed] > 0]
             else:
                 # placement pass runs even when no target changed: a
                 # completion may have opened a defrag/consolidation move
+                if rec_on:
+                    if len(changed):
+                        rec.solve(now, len(changed), False, st.n)
+                    else:
+                        rec.solve_reused()
+                    ids_ = st.ids
+                    gch = ls[changed]
+                    oldw = st.w[gch].tolist()
+                    for s, ov, nv in zip(gch.tolist(), oldw,
+                                         target[changed].tolist()):
+                        rec.alloc(now, int(ids_[s]), ov, nv)
                 st.w[ls] = target
                 upd, factors, spans = peng.apply(st.ids[ls], target,
-                                                 changed.tolist())
+                                                 changed.tolist(), now)
                 if not len(upd):
                     return
                 gi = ls[upd]
@@ -706,6 +777,9 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
             if until > max_frz:
                 max_frz = until
             events.push(until, _EV_UNFREEZE)
+            if rec_on:
+                for jid in st.ids[started].tolist():
+                    rec.freeze(now, jid, until)
 
     stall = 0
     while pi < n_jobs or st.n or delayed:
@@ -862,9 +936,12 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
         if glist is not None:
             finished = True
             for i in glist:
-                done[int(st.ids[i])] = now
+                jid = int(st.ids[i])
+                done[jid] = now
                 if peng is not None:
-                    peng.release(int(st.ids[i]))
+                    peng.release(jid)
+                if rec_on:
+                    rec.complete(now, jid)
             st.remove(glist)
             if peng is None:
                 for i in glist:
@@ -886,8 +963,12 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
                                         now if policy.explores else None))
                     peng.register(j)
                     arrived = True
+                    if rec_on:
+                        rec.admit(now, j.job_id)
                 elif verdict == "reject":
                     rejected.append(j.job_id)
+                    if rec_on:
+                        rec.reject(now, j.job_id)
                 else:
                     still.append(j)
             if still and not arrived and not st.n and pi == n_jobs:
@@ -898,13 +979,19 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
         while pi < n_jobs and pending[pi].arrival <= now + 1e-9:
             j = pending[pi]
             pi += 1
+            if rec_on:
+                rec.submit(now, j.job_id, j.arrival)
             if peng is not None:
                 verdict = peng.admit(j, st.n, len(delayed), now)
                 if verdict == "delay":
                     delayed.append(j)
+                    if rec_on:
+                        rec.delay(now, j.job_id)
                     continue
                 if verdict == "reject":
                     rejected.append(j.job_id)
+                    if rec_on:
+                        rec.reject(now, j.job_id)
                     continue
                 peng.register(j)
             # the cluster-keyed table row (flat clusters share the int-path
@@ -916,6 +1003,8 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
             fresh.append(st.add(j, j.speed_table(cluster),
                                 now if policy.explores else None))
             arrived = True
+            if rec_on:
+                rec.admit(now, j.job_id)
 
         if st.n > peak:
             peak = st.n
@@ -924,7 +1013,12 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
         rescheduled = False
         if arrived or finished or now + 1e-9 >= next_resched:
             if st.n:
-                apply_alloc(now)
+                if rec_on:
+                    _t0 = perf_counter()
+                    apply_alloc(now)
+                    t_solve_add(perf_counter() - _t0)
+                else:
+                    apply_alloc(now)
             next_resched = now + RESCHEDULE_EVERY
             rescheduled = True
 
@@ -973,7 +1067,8 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
     return SimResult(strategy=policy.spec, completion_times=done,
                      arrival_times=arrivals, peak_concurrency=peak,
                      rejected=tuple(rejected),
-                     migrations=0 if peng is None else peng.migrations)
+                     migrations=0 if peng is None else peng.migrations,
+                     telemetry=rec.finish(now))
 
 
 # The paper's Table-3 strategy sweep, plus the registry extensions.

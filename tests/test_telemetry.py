@@ -1,0 +1,289 @@
+"""Telemetry layer (observability PR): zero-overhead-when-off contract.
+
+The load-bearing property: instrumentation NEVER changes the trajectory.
+Telemetry-on runs must reproduce the frozen 60-job goldens and the
+1000-job sha256 traces bit-for-bit, both engines must roll up to bitwise
+equal utilization, and the offline ``metrics_rollup`` replay of a
+recorded event stream must equal the live accumulation exactly.
+"""
+import json
+import math
+
+import pytest
+
+from test_placement import (FRAG, GOLDEN_1000JOB_SHA256,
+                            GOLDEN_60JOB_JCT_HOURS, _trace_sha256)
+
+from repro.collectives.cost import ClusterModel
+from repro.core import scheduler as S
+from repro.core import telemetry as tele
+from repro.core.jobs import make_workload, synthetic_workload
+from repro.core.simulator import simulate
+
+
+@pytest.fixture(scope="module")
+def trace60():
+    return synthetic_workload(60, 500.0, 0)
+
+
+def _run(jobs, strat="precompute", cluster=None, sink=None, **kw):
+    return simulate(jobs, 64 if cluster is None else None, strat,
+                    cluster=cluster, telemetry=tele.Telemetry(sink=sink),
+                    **kw)
+
+
+# --------------------------------------------------------------------------
+# Trajectory invariance: telemetry on == telemetry off, bit for bit
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strat", sorted(GOLDEN_60JOB_JCT_HOURS))
+def test_60job_goldens_hold_with_telemetry_on(trace60, strat):
+    res = _run(trace60, strat, sink=tele.MemorySink())
+    assert res.avg_jct_hours == GOLDEN_60JOB_JCT_HOURS[strat], strat
+
+
+@pytest.mark.parametrize("pattern", sorted(GOLDEN_1000JOB_SHA256))
+def test_1000job_sha256_holds_with_telemetry_on(pattern):
+    jobs = make_workload(pattern, 1000, 250.0, 0)
+    res = _run(jobs, "precompute", sink=tele.RingSink(4096))
+    assert _trace_sha256(res) == GOLDEN_1000JOB_SHA256[pattern], pattern
+
+
+def test_every_policy_on_off_parity_and_utilization(trace60):
+    for strat in S.registered_policies().values():
+        off = simulate(trace60, 64, strat)
+        on = _run(trace60, strat, sink=tele.MemorySink())
+        assert off.completion_times == on.completion_times, strat
+        assert off.telemetry is None and off.utilization is None, strat
+        assert on.telemetry is not None, strat
+        assert 0.0 < on.utilization <= 1.0, strat
+
+
+def test_cross_engine_rollup_is_bitwise_equal(trace60):
+    """Both engines see the same per-timestamp event sets, so the
+    time-weighted integrals must agree to the last bit — on the flat
+    cluster and under fragmentation/migration alike."""
+    for cluster in (None, FRAG):
+        for strat in ("precompute", "srtf"):
+            fast = _run(trace60, strat, cluster=cluster)
+            ref = _run(trace60, strat, cluster=cluster, engine="reference")
+            a, b = fast.telemetry, ref.telemetry
+            assert a.utilization == b.utilization, (strat, cluster)
+            assert a.busy_gpu_seconds == b.busy_gpu_seconds, (strat, cluster)
+            assert a.queue_peak == b.queue_peak, (strat, cluster)
+            assert a.queue_mean == b.queue_mean, (strat, cluster)
+            assert a.avg_jct_s == b.avg_jct_s, (strat, cluster)
+            assert a.jct_histogram == b.jct_histogram, (strat, cluster)
+
+
+def test_rollup_agrees_with_simresult(trace60):
+    res = _run(trace60, "precompute", sink=tele.MemorySink())
+    t = res.telemetry
+    # np.mean is pairwise, the recorder sums serially: isclose, not ==
+    assert math.isclose(t.avg_jct_s / 3600.0, res.avg_jct_hours)
+    assert t.n_completed == len(res.completion_times)
+    assert t.n_rejected == len(res.rejected)
+    assert t.n_migrations == res.migrations
+    roll = t.rollup()
+    json.dumps(roll)            # JSON-serializable by construction
+    assert roll["utilization"] == t.utilization
+    assert roll["counters"] == t.counters
+
+
+# --------------------------------------------------------------------------
+# Event stream: every kind shows up where it should, schema-valid
+# --------------------------------------------------------------------------
+
+
+def _kinds(events):
+    return {e["kind"] for e in events}
+
+
+def test_flat_run_emits_core_lifecycle_kinds(trace60):
+    sink = tele.MemorySink()
+    _run(trace60, "precompute", sink=sink)
+    evs = sink.events
+    for ev in evs:
+        tele.validate_event(ev)
+    assert evs[0]["kind"] == "run" and evs[-1]["kind"] == "end"
+    assert {"submit", "admit", "alloc", "freeze", "unfreeze", "complete",
+            "solve"} <= _kinds(evs)
+    # solve records are fresh solves only; reuses live in the counters
+    n_solve = sum(1 for e in evs if e["kind"] == "solve")
+    ctrs = _run(trace60, "precompute").telemetry.counters
+    assert n_solve == ctrs["solve.calls"] - ctrs["solve.reused"]
+    assert all(not e["reuse"] for e in evs if e["kind"] == "solve")
+
+
+def test_reject_events_on_queue_cap_cluster():
+    cl = ClusterModel(capacity=16, gpus_per_node=8,
+                      inter_node_beta=1.0 / 1.25e8, placement="packed",
+                      admission="queue_cap_2")
+    jobs = make_workload("bursty", 60, 100.0, 3)
+    sink = tele.MemorySink()
+    res = _run(jobs, "precompute", cluster=cl, sink=sink)
+    rejects = [e for e in sink.events if e["kind"] == "reject"]
+    assert len(rejects) == len(res.rejected) > 0
+    assert {e["job"] for e in rejects} == set(res.rejected)
+
+
+def test_delay_events_on_free_gpus_cluster():
+    cl = ClusterModel(capacity=16, gpus_per_node=8,
+                      inter_node_beta=1.0 / 1.25e8, placement="packed",
+                      admission="free_gpus_4")
+    jobs = make_workload("bursty", 60, 100.0, 3)
+    sink = tele.MemorySink()
+    _run(jobs, "precompute", cluster=cl, sink=sink)
+    assert any(e["kind"] == "delay" for e in sink.events)
+
+
+def test_migrate_events_match_migration_count():
+    jobs = make_workload("mixed_maxw", 40, 300.0, 7)
+    sink = tele.MemorySink()
+    res = _run(jobs, "precompute", cluster=FRAG, sink=sink)
+    migs = [e for e in sink.events if e["kind"] == "migrate"]
+    assert res.migrations > 0, "scenario no longer migrates — pick another"
+    assert len(migs) == res.migrations == res.telemetry.n_migrations
+
+
+def test_unfreeze_follows_freeze_in_order(trace60):
+    sink = tele.MemorySink()
+    _run(trace60, "srtf", sink=sink)
+    frozen = {}
+    for ev in sink.events:
+        if ev["kind"] == "freeze":
+            frozen[ev["job"]] = ev["until"]
+        elif ev["kind"] == "unfreeze":
+            assert ev["job"] in frozen, "unfreeze without freeze"
+            assert ev["t"] == frozen.pop(ev["job"])
+    # stream is time-ordered (lazy unfreeze flushing must not reorder)
+    ts = [e["t"] for e in sink.events]
+    assert ts == sorted(ts)
+
+
+def test_validate_event_rejects_malformed():
+    with pytest.raises(ValueError, match="unknown event kind"):
+        tele.validate_event({"kind": "nope", "t": 0.0})
+    with pytest.raises(ValueError, match="missing field"):
+        tele.validate_event({"kind": "admit", "t": 0.0})
+    with pytest.raises(ValueError, match="type"):
+        tele.validate_event({"kind": "admit", "t": 0.0, "job": "seven"})
+    with pytest.raises(ValueError, match="type"):
+        # bools are not ints/floats for schema purposes
+        tele.validate_event({"kind": "admit", "t": True, "job": 7})
+    # float fields accept ints (JSON number), extras are allowed
+    tele.validate_event({"kind": "admit", "t": 3, "job": 7, "extra": "ok"})
+
+
+# --------------------------------------------------------------------------
+# Sinks
+# --------------------------------------------------------------------------
+
+
+def test_ring_sink_is_bounded(trace60):
+    sink = tele.RingSink(maxlen=64)
+    _run(trace60, "precompute", sink=sink)
+    assert len(sink.events) == 64
+    assert sink.events[-1]["kind"] == "end"
+
+
+def test_jsonl_round_trip_and_offline_rollup(tmp_path, trace60):
+    path = str(tmp_path / "events.jsonl")
+    res = _run(trace60, "precompute", sink=tele.JSONLSink(path))
+    events = tele.read_jsonl(path)
+    for ev in events:
+        tele.validate_event(ev)
+    live = res.telemetry
+    replay = tele.metrics_rollup(events)
+    assert replay.utilization == live.utilization
+    assert replay.queue_mean == live.queue_mean
+    assert replay.queue_peak == live.queue_peak
+    assert replay.jct_histogram == live.jct_histogram
+    assert replay.n_completed == live.n_completed
+
+
+def test_tee_sink_fans_out(trace60):
+    a, b = tele.MemorySink(), tele.RingSink(maxlen=16)
+    _run(trace60, "precompute", sink=tele.TeeSink([a, b]))
+    assert len(a.events) > 16 and len(b.events) == 16
+    assert a.events[-16:] == list(b.events)
+
+
+def test_chrome_trace_is_perfetto_loadable(tmp_path):
+    """The acceptance smoke test: json.load the file, every event carries
+    ph/ts/pid, and there are complete ("X") spans on per-node tracks."""
+    path = str(tmp_path / "trace.json")
+    cl = ClusterModel(capacity=32, gpus_per_node=8,
+                      inter_node_beta=1.0 / 1.25e8)
+    jobs = make_workload("poisson", 40, 300.0, 0)
+    _run(jobs, "precompute", cluster=cl, sink=tele.ChromeTraceSink(path))
+    with open(path) as fh:
+        doc = json.load(fh)
+    evs = doc["traceEvents"]
+    assert evs, "empty trace"
+    for ev in evs:
+        assert "ph" in ev and "ts" in ev and "pid" in ev
+    spans = [e for e in evs if e["ph"] == "X"]
+    assert spans and all(e["dur"] >= 0 for e in spans)
+    # slots map to node-level tracks: pid = node index
+    assert {e["pid"] for e in spans} <= set(range(4))
+
+
+def test_write_chrome_trace_from_memory_events(tmp_path, trace60):
+    sink = tele.MemorySink()
+    _run(trace60, "precompute", sink=sink)
+    path = str(tmp_path / "post.json")
+    tele.write_chrome_trace(path, sink.events)
+    with open(path) as fh:
+        doc = json.load(fh)
+    assert any(e["ph"] == "X" for e in doc["traceEvents"])
+
+
+# --------------------------------------------------------------------------
+# Registry / disabled path
+# --------------------------------------------------------------------------
+
+
+def test_registry_counters_and_timers():
+    reg = tele.Registry()
+    c = reg.counter("x")
+    assert c is reg.counter("x")        # memoized handle
+    c.inc()
+    c.inc(4)
+    t = reg.timer("y")
+    t.add(0.5)
+    t.add(0.25)
+    assert reg.counters() == {"x": 5}
+    assert t.total_s == 0.75 and t.count == 2
+
+
+def test_null_singletons_are_inert():
+    tele.NULL_COUNTER.inc(100)
+    tele.NULL_TIMER.add(1.0)
+    rec = tele.NULL_RECORDER
+    assert rec.on is False
+    rec.submit(0.0, 1, 0.0)
+    rec.solve(0.0, 0, True, 0)
+    rec.solve_reused()
+    assert rec.finish(1.0) is None
+    r = tele.NULL.recorder("p", 64, 10)
+    assert r is tele.NULL_RECORDER
+
+
+def test_decision_counters_present_per_policy(trace60):
+    res = _run(trace60, "srtf")
+    ctrs = res.telemetry.counters
+    assert ctrs["solve.calls"] > 0
+    assert 0 < ctrs["solve.reused"] <= ctrs["solve.calls"]
+    assert ctrs["heap.pushes"] == ctrs["heap.pops"] >= 0
+    assert res.telemetry.timers["solve.wall_s"]["count"] > 0
+
+
+def test_shared_registry_accumulates_across_runs(trace60):
+    reg = tele.Registry()
+    handle = tele.Telemetry(registry=reg)
+    one = simulate(trace60, 64, "precompute", telemetry=handle)
+    solo = one.telemetry.counters["solve.calls"]
+    simulate(trace60, 64, "precompute", telemetry=handle)
+    assert reg.counters()["solve.calls"] == 2 * solo
