@@ -58,6 +58,7 @@ timed run.
 from __future__ import annotations
 
 import gc
+import hashlib
 import json
 import os
 import time
@@ -200,6 +201,8 @@ def assert_trace_parity(fast, seed, strat: str, context: str = "") -> None:
         f"{where}: migration counts diverged")
     assert fast.rejected == seed.rejected, (
         f"{where}: rejected-arrival sets diverged")
+    assert fast.evictions == seed.evictions, (
+        f"{where}: eviction counts diverged")
 
 
 def _check_simulate_parity() -> None:
@@ -310,6 +313,84 @@ def _check_pattern_parity(n_jobs: int = 40) -> None:
             seed = simulate(jobs, 64, strat, engine="reference")
             assert_trace_parity(fast, seed, strat,
                                 f"on pattern {pattern!r}")
+
+
+# Pinned churn trajectories (fault injection): 40-job mixed_maxw trace on
+# the fragmented cluster under churn_4/seed 5.  The fault schedule is a
+# pure PCG64 function of (cluster, seed), so these are stable across
+# machines — a drift means the fault delivery or eviction path changed.
+CHURN_40JOB_SHA256 = {
+    "precompute":
+        "50d49ed1a4e422cb14355123192cad0f53f61221ab324a4f92b77646b2aa2ef6",
+    "srtf":
+        "9ad59a4cace807739a8a6459c0629424271e4757bb4df95681c77ec580628ab0",
+}
+
+
+def _trace_sha256(res) -> str:
+    payload = json.dumps(sorted(res.completion_times.items()))
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+def _check_faults(n_jobs: int = 40) -> None:
+    """Fault-injection gates: (a) zero-fault runs — ``faults="none"`` —
+    are bit-identical to the fault-free cluster, every registered policy;
+    (b) under deterministic churn both engines agree bit-for-bit and the
+    pinned sha256 trajectories hold; (c) goodput is bounded to [0, 1] and
+    the failure-aware policy beats blind srtf on goodput in at least one
+    churn scenario (the robustness acceptance row)."""
+    import dataclasses
+    from benchmarks.table3_scheduler_sim import (CHURN_SCENARIOS,
+                                                 FRAGMENTED)
+    from repro.core import telemetry as tele
+    from repro.core.faults import get_fault_model
+    from repro.core.jobs import make_workload
+    from repro.core.scheduler import registered_policies
+    from repro.core.simulator import simulate
+
+    jobs = make_workload("mixed_maxw", n_jobs, 500.0, 3)
+    nofault = dataclasses.replace(FRAGMENTED, faults="none")
+    for strat in registered_policies().values():
+        base = simulate(jobs, strategy=strat, cluster=FRAGMENTED)
+        none = simulate(jobs, strategy=strat, cluster=nofault)
+        assert_trace_parity(none, base, strat, "faults='none' no-op")
+    churn = dataclasses.replace(FRAGMENTED, faults="churn_4", fault_seed=5,
+                                checkpoint_interval=200.0)
+    model = get_fault_model("churn_4")
+    horizon = jobs[-1].arrival
+    assert model.schedule(churn, 5, horizon) == model.schedule(
+        churn, 5, horizon), "fault schedule is not deterministic"
+    for strat in registered_policies().values():
+        fast = simulate(jobs, strategy=strat, cluster=churn)
+        again = simulate(jobs, strategy=strat, cluster=churn)
+        assert fast.completion_times == again.completion_times, (
+            f"simulate({strat}): churn trajectory not deterministic")
+        seed = simulate(jobs, strategy=strat, cluster=churn,
+                        engine="reference")
+        assert_trace_parity(fast, seed, strat, "under churn")
+        want = CHURN_40JOB_SHA256.get(strat)
+        if want is not None:
+            got = _trace_sha256(fast)
+            assert got == want, (
+                f"simulate({strat}) churn trajectory drifted: "
+                f"sha256 {got} != pinned {want}")
+    # goodput bounds + the failure-aware acceptance row, on the same
+    # moderate trace the published churn table sweeps
+    cjobs = make_workload("mixed_maxw", 114, 500.0, 0)
+    wins = 0
+    for name, cluster in CHURN_SCENARIOS.items():
+        g = {}
+        for strat in ("srtf", "recovery_aware"):
+            res = simulate(cjobs, strategy=strat, cluster=cluster,
+                           telemetry=tele.Telemetry())
+            gp = res.telemetry.goodput
+            assert gp is not None and 0.0 <= gp <= 1.0, (
+                f"goodput out of bounds for {strat} on {name}: {gp!r}")
+            g[strat] = gp
+        if name.startswith("churn") and g["recovery_aware"] > g["srtf"]:
+            wins += 1
+    assert wins >= 1, ("recovery_aware failed to beat blind srtf on "
+                       "goodput in any churn scenario")
 
 
 def bench_simulate(results, csv) -> None:
@@ -644,6 +725,8 @@ def check(csv=print, gate_10k: bool | None = None,
     csv("check/placement_parity,0,ok")
     _check_telemetry()
     csv("check/telemetry_parity,0,ok")
+    _check_faults()
+    csv("check/fault_parity,0,ok")
     from repro.core.jobs import make_workload
     from repro.core.scheduler import registered_policies
     from repro.core.simulator import simulate

@@ -67,6 +67,54 @@ PLACEMENT_SCENARIOS = {
 PLACEMENT_STRATEGIES = ("precompute", "pack_precompute", "srtf",
                         "pack_srtf", "fixed_8", "utility_greedy")
 
+# ---------------------------------------------------------------------------
+# Churn scenarios (PR 10).  The fragmented cluster under deterministic
+# fault injection: stochastic node churn, a correlated rack outage, and
+# permanent stragglers, swept on the ``mixed_maxw`` pattern (node-spanning
+# rings are exactly what a node failure punishes — every gang with a slot
+# on the dead node is evicted and loses un-checkpointed progress).  JCT
+# alone hides that cost, so these rows also score *goodput*: useful
+# progress-seconds per busy GPU-second, net of rolled-back work and
+# restart freezes.
+# ---------------------------------------------------------------------------
+CHURN_SCENARIOS = {
+    "churn_6": dataclasses.replace(FRAGMENTED, faults="churn_6",
+                                   fault_seed=7, checkpoint_interval=200.0),
+    "churn_12": dataclasses.replace(FRAGMENTED, faults="churn_12",
+                                    fault_seed=7, checkpoint_interval=200.0),
+    "rack_7000": dataclasses.replace(FRAGMENTED, faults="rack_7000",
+                                     fault_seed=7,
+                                     checkpoint_interval=200.0),
+    "stragglers_2": dataclasses.replace(FRAGMENTED, faults="stragglers_2",
+                                        fault_seed=7,
+                                        checkpoint_interval=200.0),
+}
+# blind baselines against the failure-aware policy
+CHURN_STRATEGIES = ("precompute", "srtf", "pack_srtf", "recovery_aware")
+
+
+def run_churn(seed: int = 0) -> dict[str, dict[str, dict[str, float]]]:
+    """Per-churn-scenario sweep: avg JCT (hours), goodput and eviction
+    count per strategy on the moderate ``mixed_maxw`` trace."""
+    from repro.core import telemetry
+    from repro.core.jobs import make_workload
+    from repro.core.simulator import simulate
+
+    jobs = make_workload("mixed_maxw", 114, 500.0, seed)
+    out: dict[str, dict[str, dict[str, float]]] = {}
+    for name, cluster in CHURN_SCENARIOS.items():
+        row = {}
+        for strat in CHURN_STRATEGIES:
+            res = simulate(jobs, cluster=cluster, strategy=strat,
+                           telemetry=telemetry.Telemetry())
+            jct = [res.completion_times[j] - res.arrival_times[j]
+                   for j in res.completion_times]
+            row[strat] = {"jct_h": sum(jct) / len(jct) / 3600.0,
+                          "goodput": res.telemetry.goodput,
+                          "evictions": float(res.evictions)}
+        out[name] = row
+    return out
+
 
 def run(seed: int = 0):
     return run_table3(seed=seed)
@@ -163,6 +211,17 @@ def main(csv=print):
             f"srtf={row['srtf'] / row['pack_srtf']:.2f}x;"
             f"precompute="
             f"{row['precompute'] / row['pack_precompute']:.2f}x")
+    # churn scenarios: every policy scored on JCT *and* goodput under
+    # deterministic fault injection (the robustness acceptance rows —
+    # recovery_aware should beat blind srtf on goodput under churn)
+    for name, row in run_churn().items():
+        for strat in CHURN_STRATEGIES:
+            m = row[strat]
+            csv(f"table3/churn/{name}/{strat},0,"
+                f"ours_h={m['jct_h']:.2f};goodput={m['goodput']:.4f};"
+                f"evictions={int(m['evictions'])}")
+        csv(f"table3/churn/{name}/recovery_vs_srtf,0,goodput="
+            f"{row['recovery_aware']['goodput'] / row['srtf']['goodput']:.3f}x")
     # per-strategy decision counters (telemetry layer): the solver-effort
     # story behind the JCT columns — e.g. solve.reused / solve.calls is
     # the cross-tick reuse rate the incremental core banks on

@@ -94,19 +94,23 @@ def scheduler_rollup_table(sched_dir=SCHED_DIR):
     if not files:
         return
     print("\n### Scheduler telemetry rollups\n")
-    print("| run | policy | jobs | makespan h | util | avg JCT h | "
-          "queue peak | rejected | migrations |")
-    print("|---|---|---|---|---|---|---|---|---|")
+    print("| run | policy | jobs | makespan h | util | goodput | "
+          "avg JCT h | queue peak | rejected | migrations | evictions |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
     for fn in files:
         r = json.load(open(fn))
         util = r.get("utilization")
+        # goodput is None on idle runs and absent from pre-PR-10 rollups
+        good = r.get("goodput")
         print(f"| {os.path.splitext(os.path.basename(fn))[0]} "
               f"| {r.get('policy', '?')} | {r.get('n_jobs', 0)} "
               f"| {r.get('makespan', 0.0)/3600.0:.2f} "
               f"| {'—' if util is None else f'{util:.3f}'} "
+              f"| {'—' if good is None else f'{good:.3f}'} "
               f"| {r.get('avg_jct_s', 0.0)/3600.0:.2f} "
               f"| {r.get('queue_peak', 0)} | {r.get('n_rejected', 0)} "
-              f"| {r.get('n_migrations', 0)} |")
+              f"| {r.get('n_migrations', 0)} "
+              f"| {r.get('n_evictions', 0)} |")
 
 
 if __name__ == "__main__":

@@ -46,41 +46,90 @@ class CheckpointStore:
     def _path(self, step: int) -> str:
         return os.path.join(self.dir, f"ckpt_{step:010d}.npz")
 
+    def _meta_path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:010d}.json")
+
     def save(self, step: int, state: dict, meta: dict | None = None
              ) -> float:
-        """Write a checkpoint; returns wall seconds spent."""
+        """Write a checkpoint; returns wall seconds spent.
+
+        Both the array file and the manifest sidecar go through a
+        tmp-file + ``os.replace`` dance, so a crash mid-write leaves
+        either the previous snapshot or a stray tmp file — never a
+        half-written ``ckpt_*`` that a later restore would trust.
+        """
         t0 = time.perf_counter()
         flat = _flatten(state)
-        tmp = self._path(step) + ".tmp.npz"  # np.savez appends .npz itself
-        np.savez(tmp[:-4], **flat)
+        tmp = os.path.join(self.dir, f".tmp_ckpt_{step:010d}.npz")
+        np.savez(tmp[:-4], **flat)  # np.savez appends .npz itself
         os.replace(tmp, self._path(step))
         manifest = {"step": step, "meta": meta or {},
                     "time": time.time()}
-        with open(os.path.join(self.dir, f"ckpt_{step:010d}.json"), "w") as f:
+        mtmp = self._meta_path(step) + ".tmp"
+        with open(mtmp, "w") as f:
             json.dump(manifest, f)
+        os.replace(mtmp, self._meta_path(step))
         return time.perf_counter() - t0
 
     def steps(self) -> list[int]:
         out = []
         for fn in os.listdir(self.dir):
             if fn.startswith("ckpt_") and fn.endswith(".npz"):
-                out.append(int(fn[5:-4]))
+                try:
+                    out.append(int(fn[5:-4]))
+                except ValueError:  # stray/foreign file, not a snapshot
+                    continue
         return sorted(out)
 
+    def _load_arrays(self, step: int) -> dict[str, np.ndarray]:
+        with np.load(self._path(step)) as z:
+            return {k: z[k] for k in z.files}
+
+    def _load_meta(self, step: int) -> dict:
+        """Manifest meta, or {} when the sidecar is missing/corrupt —
+        the arrays are the checkpoint; the sidecar is advisory."""
+        try:
+            with open(self._meta_path(step)) as f:
+                return json.load(f)["meta"]
+        except (OSError, ValueError, KeyError):
+            return {}
+
     def latest_step(self) -> int | None:
-        s = self.steps()
-        return s[-1] if s else None
+        """Newest step whose array file is readable; snapshots truncated
+        by a crash mid-write (pre-atomic-rename layouts, torn disks) are
+        skipped rather than returned as restore targets."""
+        for step in reversed(self.steps()):
+            try:
+                with np.load(self._path(step)) as z:
+                    len(z.files)
+                return step
+            except Exception:
+                continue
+        return None
 
     def restore(self, template, step: int | None = None
                 ) -> tuple[dict, dict, float]:
-        """-> (state, meta, seconds)."""
+        """-> (state, meta, seconds).
+
+        With ``step=None`` the newest *readable* snapshot wins: a
+        corrupt/truncated ``.npz`` is skipped and the next older one is
+        tried, so a torn write costs one checkpoint interval of
+        progress, not the whole run.  An explicit ``step`` is trusted —
+        corruption there raises.
+        """
         t0 = time.perf_counter()
-        step = step if step is not None else self.latest_step()
-        if step is None:
+        if step is not None:
+            flat = self._load_arrays(step)
+            state = _unflatten(template, flat)
+            return state, self._load_meta(step), time.perf_counter() - t0
+        candidates = self.steps()
+        if not candidates:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        with np.load(self._path(step)) as z:
-            flat = {k: z[k] for k in z.files}
-        state = _unflatten(template, flat)
-        with open(os.path.join(self.dir, f"ckpt_{step:010d}.json")) as f:
-            manifest = json.load(f)
-        return state, manifest["meta"], time.perf_counter() - t0
+        for s in reversed(candidates):
+            try:
+                flat = self._load_arrays(s)
+            except Exception:
+                continue  # torn snapshot: fall back to the next older
+            state = _unflatten(template, flat)
+            return state, self._load_meta(s), time.perf_counter() - t0
+        raise FileNotFoundError(f"no readable checkpoint in {self.dir}")

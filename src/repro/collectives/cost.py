@@ -90,6 +90,19 @@ class ClusterModel:
         reallocation event, a node-spanning gang that now fits on a
         single node is consolidated there, charging ``restart_cost``
         (the gang moves).  Requires ``placement``.
+      * ``faults`` — name of a registered
+        :class:`repro.core.faults.FaultModel` (``"none"``,
+        ``"kill_<t>"``, ``"churn_<n>"``, ``"drain_<t>"``,
+        ``"stragglers_<k>"``, ``"rack_<t>"``) or an instance; with
+        ``fault_seed`` it yields one deterministic incident tape per
+        run, delivered identically by both simulator engines.  Requires
+        ``placement`` (failures act on concrete node assignments).
+      * ``fault_seed`` — seed for the fault schedule (independent of the
+        workload seed, so the same trace can face different churn).
+      * ``checkpoint_interval`` — progress-seconds between checkpoints
+        for the lost-work charge on eviction
+        (:class:`repro.core.faults.CheckpointPolicy`); ``None`` uses
+        ``faults.DEFAULT_CHECKPOINT_INTERVAL``.  Requires ``faults``.
 
     A flat homogeneous ClusterModel (defaults) reproduces the paper setup
     bit-identically — the engines and speed tables take the exact same
@@ -108,6 +121,9 @@ class ClusterModel:
     placement: str | None = None
     admission: str = "admit_all"
     defrag: bool = False
+    faults: object | None = None        # str spec or faults.FaultModel
+    fault_seed: int = 0
+    checkpoint_interval: float | None = None
 
     def __post_init__(self):
         if self.capacity < 1:
@@ -169,6 +185,25 @@ class ClusterModel:
             raise ValueError(
                 "defrag without placement does nothing — the migration "
                 "pass moves gangs the placement engine placed")
+        if self.faults is not None:
+            if self.placement is None:
+                raise ValueError(
+                    "faults without placement does nothing — failures "
+                    "act on concrete node assignments; set placement "
+                    "(a single-node placement engine is otherwise a "
+                    "no-op)")
+            # deferred import: faults builds on the scheduler registry
+            from repro.core.faults import get_fault_model
+            get_fault_model(self.faults).validate(self)
+        if self.checkpoint_interval is not None:
+            if self.faults is None:
+                raise ValueError(
+                    "checkpoint_interval without faults does nothing — "
+                    "lost work is only charged on eviction")
+            if self.checkpoint_interval <= 0.0:
+                raise ValueError(
+                    f"checkpoint_interval must be > 0, got "
+                    f"{self.checkpoint_interval}")
 
     @property
     def is_flat(self) -> bool:

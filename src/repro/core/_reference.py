@@ -271,6 +271,25 @@ def simulate_reference(jobs: list[JobSpec], cluster: ClusterModel,
     if peng is not None:
         peng.rec = rec
     pending = sorted(jobs, key=lambda j: j.arrival)
+    # Fault injection: the same deterministic incident tape as the fast
+    # engine — same model, same seed, same horizon, so the schedules are
+    # bit-identical by construction (FaultModel.schedule is pure).
+    fsched: tuple = ()
+    ckpt = None
+    if cluster.faults is not None:
+        from repro.core.faults import CheckpointPolicy, get_fault_model
+        horizon = pending[-1].arrival if pending else 0.0
+        fsched = get_fault_model(cluster.faults).schedule(
+            cluster, cluster.fault_seed, horizon)
+        ckpt = CheckpointPolicy(
+            interval=(cluster.checkpoint_interval
+                      if cluster.checkpoint_interval is not None
+                      else CheckpointPolicy.interval),
+            restart_cost=cluster.restart_cost)
+    nf = len(fsched)
+    fi = 0
+    requeue_rem: dict[int, float] = {}
+    evictions = 0
     active: list[_Active] = []
     done: dict[int, float] = {}
     arrivals = {j.job_id: j.arrival for j in jobs}
@@ -283,6 +302,10 @@ def simulate_reference(jobs: list[JobSpec], cluster: ClusterModel,
 
     def _admit(j: JobSpec, now: float) -> None:
         a = _Active(spec=j, remaining=j.epochs)
+        rr = requeue_rem.pop(j.job_id, None)
+        if rr is not None:
+            # evicted-then-readmitted: resume from rolled-back progress
+            a.remaining = rr
         if not flat_fabric or peng is not None:
             # placement engines run over the *flat* table (speed_table
             # returns it when cluster.placement is set) and scale by the
@@ -331,9 +354,13 @@ def simulate_reference(jobs: list[JobSpec], cluster: ClusterModel,
                 rec.solve(now, len(changed), False, len(active))
             else:
                 rec.solve_reused()
+        upd, factors, spans = peng.apply(ids, tvec, changed, now)
+        # alloc events fire after apply (mirrors the fast engine): the
+        # fault clamp can shrink tvec entries in-place, and the logged
+        # width must be the grant the gang actually got
+        if rec_on:
             for i in changed:
                 rec.alloc(now, active[i].spec.job_id, active[i].w, tvec[i])
-        upd, factors, spans = peng.apply(ids, tvec, changed, now)
         for i, a in enumerate(active):
             a.w = tvec[i]
         for pos, f, sp in zip(upd.tolist(), factors.tolist(),
@@ -362,6 +389,8 @@ def simulate_reference(jobs: list[JobSpec], cluster: ClusterModel,
         t_candidates = [next_resched]
         if pending:
             t_candidates.append(pending[0].arrival)
+        if fi < nf:
+            t_candidates.append(fsched[fi].t)
         for a in active:
             s = a.speed(now)
             if s > 0:
@@ -396,6 +425,59 @@ def simulate_reference(jobs: list[JobSpec], cluster: ClusterModel,
                 peng.release(a.spec.job_id)
             if rec_on:
                 rec.complete(now, a.spec.job_id)
+
+        # --- faults ------------------------------------------------------
+        # mirrors the fast engine exactly: incidents fire after
+        # completions, before arrivals; victims evict in active-list
+        # order (== the fast engine's ascending live slots) and re-enter
+        # through the normal admission path
+        faulted = False
+        while fi < nf and fsched[fi].t <= now + 1e-9:
+            fe = fsched[fi]
+            fi += 1
+            faulted = True
+            if rec_on:
+                rec.fault(now, fe.node, fe.kind)
+            if fe.kind == "fail":
+                victims = peng.fail(fe.node)
+                if victims:
+                    vset = set(victims)
+                    vact = [a for a in active if a.spec.job_id in vset]
+                    evicted = []
+                    for a in vact:
+                        done_p = a.spec.epochs - a.remaining
+                        lost = ckpt.lost_progress(done_p)
+                        evicted.append(
+                            (a.spec.job_id, a.spec, a.remaining + lost,
+                             lost,
+                             lost / done_p if done_p > 0.0 else 0.0))
+                        active.remove(a)
+                    evictions += len(vact)
+                    for jid, spec, new_rem, lost, lost_frac in evicted:
+                        if rec_on:
+                            rec.evict(now, jid, fe.node, lost, lost_frac)
+                        requeue_rem[jid] = new_rem
+                        verdict = peng.admit(spec, len(active),
+                                             len(delayed), now)
+                        if verdict == "admit":
+                            _admit(spec, now)
+                            if rec_on:
+                                rec.recover(now, jid)
+                        elif verdict == "reject":
+                            requeue_rem.pop(jid)
+                            rejected.append(jid)
+                            if rec_on:
+                                rec.reject(now, jid)
+                        else:
+                            delayed.append(spec)
+                            if rec_on:
+                                rec.delay(now, jid)
+            elif fe.kind == "drain":
+                peng.drain(fe.node)
+            elif fe.kind == "recover":
+                peng.recover(fe.node)
+            else:
+                peng.degrade(fe.node, fe.factor)
 
         # --- arrivals ----------------------------------------------------
         arrived = False
@@ -443,7 +525,7 @@ def simulate_reference(jobs: list[JobSpec], cluster: ClusterModel,
         peak = max(peak, len(active))
 
         # --- reallocation ------------------------------------------------
-        if arrived or finished or now + 1e-9 >= next_resched:
+        if arrived or finished or faulted or now + 1e-9 >= next_resched:
             if active:
                 if rec_on:
                     _t0 = perf_counter()
@@ -457,4 +539,5 @@ def simulate_reference(jobs: list[JobSpec], cluster: ClusterModel,
                      arrival_times=arrivals, peak_concurrency=peak,
                      rejected=tuple(rejected),
                      migrations=0 if peng is None else peng.migrations,
+                     evictions=evictions,
                      telemetry=rec.finish(now))

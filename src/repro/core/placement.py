@@ -83,24 +83,56 @@ class Placement:
 
 
 class ClusterState:
-    """Per-node free-GPU state, updated incrementally across events."""
+    """Per-node free-GPU state, updated incrementally across events.
 
-    __slots__ = ("node_gpus", "free", "placements")
+    Fault lifecycle (PR 10): ``fail_node`` kills a node (evicting every
+    gang with a slot on it), ``drain_node`` decommissions it gracefully
+    (running gangs stay, nothing new lands), ``recover_node`` returns it
+    to service, and ``set_speed_mult`` marks it a straggler.  ``avail``
+    is what placement may use — identical to ``free`` (the same array,
+    not a copy) while every node is healthy, so the zero-fault paths are
+    bit-identical to the pre-fault code.
+    """
+
+    __slots__ = ("node_gpus", "free", "placements", "ok", "draining",
+                 "speed_mult", "_masked", "degraded")
 
     def __init__(self, nodes: tuple[NodeSpec, ...]):
         self.node_gpus = np.array([n.gpus for n in nodes], np.int64)
         self.free = self.node_gpus.copy()
         self.placements: dict[int, Placement] = {}
+        self.ok = np.ones(len(self.node_gpus), bool)
+        self.draining = np.zeros(len(self.node_gpus), bool)
+        self.speed_mult = np.ones(len(self.node_gpus))
+        self._masked = False      # any node failed or draining
+        self.degraded = False     # any speed_mult != 1
 
     @property
     def n_nodes(self) -> int:
         return len(self.node_gpus)
+
+    @property
+    def avail(self) -> np.ndarray:
+        """Free GPUs placement may actually use: ``free`` itself while
+        every node is healthy, else a copy with failed/draining nodes
+        masked to zero."""
+        if not self._masked:
+            return self.free
+        out = self.free.copy()
+        out[~(self.ok & ~self.draining)] = 0
+        return out
 
     def total_free(self) -> int:
         return int(self.free.sum())
 
     def largest_free_block(self) -> int:
         return int(self.free.max())
+
+    def total_avail(self) -> int:
+        return int(self.avail.sum())
+
+    def largest_avail_block(self) -> int:
+        return int(self.avail.max())
 
     def placed_w(self, job_id: int) -> int:
         pl = self.placements.get(job_id)
@@ -120,32 +152,87 @@ class ClusterState:
         pl = self.placements.pop(job_id, None)
         if pl is not None:
             for node, gpus in pl.assignment:
-                self.free[node] += gpus
+                # a failed node's GPUs are gone until recover_node —
+                # releasing a gang that held slots there must not
+                # resurrect them (satellite: nodes are not immortal)
+                if self.ok[node]:
+                    self.free[node] += gpus
         return pl
 
+    # -- fault lifecycle ---------------------------------------------------
+
+    def _refresh_mask(self) -> None:
+        self._masked = not bool((self.ok & ~self.draining).all())
+
+    def fail_node(self, node: int) -> list[int]:
+        """Kill ``node``: zero its capacity and evict every gang with a
+        slot on it.  Returns the victim job ids (sorted)."""
+        assert self.ok[node], f"node {node} is already failed"
+        self.ok[node] = False
+        self.free[node] = 0
+        self._refresh_mask()
+        victims = sorted(jid for jid, pl in self.placements.items()
+                         if node in pl.node_ids)
+        for jid in victims:
+            self.release(jid)
+        return victims
+
+    def drain_node(self, node: int) -> None:
+        """Graceful decommission: running gangs stay, nothing new lands
+        on the node until ``recover_node``."""
+        assert self.ok[node], f"cannot drain failed node {node}"
+        self.draining[node] = True
+        self._refresh_mask()
+
+    def recover_node(self, node: int) -> None:
+        """Return a failed or draining node to service."""
+        if not self.ok[node]:
+            self.ok[node] = True
+            self.free[node] = self.node_gpus[node]
+        self.draining[node] = False
+        self._refresh_mask()
+
+    def set_speed_mult(self, node: int, factor: float) -> None:
+        """Mark ``node`` a straggler running at ``factor`` of nominal."""
+        assert 0.0 < factor <= 1.0, factor
+        self.speed_mult[node] = factor
+        self.degraded = bool((self.speed_mult != 1.0).any())
+
     def check_invariants(self, capacity: int) -> None:
-        """Test hook: no node oversubscribed, granted GPUs conserved."""
+        """Test hook: no node oversubscribed, granted GPUs conserved
+        against the *effective* (surviving) capacity, failed nodes
+        empty."""
         assert (self.free >= 0).all(), self.free
         assert (self.free <= self.node_gpus).all(), self.free
+        assert (self.free[~self.ok] == 0).all(), self.free
         placed = sum(pl.w for pl in self.placements.values())
-        assert placed + self.total_free() == capacity, (
-            placed, self.total_free(), capacity)
+        effective = capacity - int(self.node_gpus[~self.ok].sum())
+        assert placed + self.total_free() == effective, (
+            placed, self.total_free(), effective)
         per_node = np.zeros(self.n_nodes, np.int64)
         for pl in self.placements.values():
             assert pl.w > 0, pl
             for node, gpus in pl.assignment:
                 per_node[node] += gpus
-        assert (per_node + self.free == self.node_gpus).all(), per_node
+        assert (per_node[~self.ok] == 0).all(), per_node
+        ok = self.ok
+        assert (per_node[ok] + self.free[ok] == self.node_gpus[ok]).all(), \
+            per_node
 
 
 @dataclasses.dataclass(frozen=True)
 class PlacementView:
     """Read-only snapshot handed to placement-aware policies via
     ``scheduler.AllocView.placement``: per-node capacities, current free
-    GPUs, and the active strategy name."""
+    GPUs, and the active strategy name.  On fault-capable clusters the
+    health vectors are populated (``None`` otherwise) so policies can
+    route around dead, draining, or straggling nodes."""
     node_gpus: np.ndarray
     free: np.ndarray
     strategy: str
+    ok: np.ndarray | None = None
+    draining: np.ndarray | None = None
+    speed_mult: np.ndarray | None = None
 
 
 # --------------------------------------------------------------------------
@@ -190,7 +277,7 @@ class PackedPlacement(PlacementStrategy):
     name = "packed"
 
     def place(self, state, w):
-        free = state.free
+        free = state.avail
         for i in range(state.n_nodes):
             if free[i] >= w:
                 return ((i, w),)
@@ -207,7 +294,7 @@ class SpreadPlacement(PlacementStrategy):
     name = "spread"
 
     def place(self, state, w):
-        free = state.free.copy()
+        free = state.avail.copy()
         taken = np.zeros(state.n_nodes, np.int64)
         for _ in range(w):
             i = int(np.argmax(free))
@@ -226,7 +313,7 @@ class BestFitPlacement(PlacementStrategy):
     name = "best_fit"
 
     def place(self, state, w):
-        free = state.free
+        free = state.avail
         best, best_left = -1, None
         for i in range(state.n_nodes):
             left = int(free[i]) - w
@@ -407,6 +494,12 @@ class PlacementEngine:
         self._hw_cache: dict = {}
         self._uniform_hw = all(n.hw is None or n.hw == cluster.hw
                                for n in self.nodes)
+        # fault-capable run: apply() clamps grants to surviving capacity
+        # (gated so the zero-fault path is byte-identical)
+        self.faulty = cluster.faults is not None
+        # jobs whose speed factor must refresh at the next apply() even
+        # though their gang did not change (straggler degradation)
+        self.dirty: set[int] = set()
 
     # -- arrivals ----------------------------------------------------------
 
@@ -414,22 +507,54 @@ class PlacementEngine:
         self.spec_of[spec.job_id] = spec
 
     def admit(self, spec, n_active: int, n_delayed: int, now: float) -> str:
+        # avail == free (same values) while every node is healthy
         view = AdmissionView(n_active=n_active, n_delayed=n_delayed,
-                             total_free=self.state.total_free(),
+                             total_free=self.state.total_avail(),
                              largest_free_block=(
-                                 self.state.largest_free_block()))
+                                 self.state.largest_avail_block()))
         verdict = self.admission.decide(spec, view, now)
         assert verdict in (ADMIT, DELAY, REJECT), verdict
         return verdict
 
+    # -- fault delivery ----------------------------------------------------
+
+    def fail(self, node: int) -> list[int]:
+        """Node death: returns the evicted job ids (sorted).  Killing an
+        already-dead node is a no-op — stochastic churn can draw the
+        same node twice with overlapping outages."""
+        if not self.state.ok[node]:
+            return []
+        return self.state.fail_node(node)
+
+    def drain(self, node: int) -> None:
+        if self.state.ok[node] and not self.state.draining[node]:
+            self.state.drain_node(node)
+
+    def recover(self, node: int) -> None:
+        self.state.recover_node(node)
+
+    def degrade(self, node: int, factor: float) -> None:
+        """Straggler: the node runs at ``factor``; gangs already placed
+        there get their speed refreshed at the next apply()."""
+        self.state.set_speed_mult(node, factor)
+        for jid, pl in self.state.placements.items():
+            if node in pl.node_ids:
+                self.dirty.add(jid)
+
     # -- policy-facing view ------------------------------------------------
 
     def view(self) -> PlacementView:
-        # both arrays are copies: a policy mutating its snapshot must not
+        # all arrays are copies: a policy mutating its snapshot must not
         # corrupt the engine's live bookkeeping
-        return PlacementView(node_gpus=self.state.node_gpus.copy(),
-                             free=self.state.free.copy(),
-                             strategy=self.strategy.name)
+        st = self.state
+        return PlacementView(node_gpus=st.node_gpus.copy(),
+                             free=st.free.copy(),
+                             strategy=self.strategy.name,
+                             ok=st.ok.copy() if self.faulty else None,
+                             draining=(st.draining.copy()
+                                       if self.faulty else None),
+                             speed_mult=(st.speed_mult.copy()
+                                         if self.faulty else None))
 
     # -- the per-event placement pass --------------------------------------
 
@@ -453,9 +578,24 @@ class PlacementEngine:
             w = int(target[pos])
             if w > 0:
                 jid = int(ids[pos])
+                if self.faulty:
+                    # a fault-blind policy may grant more than the
+                    # surviving nodes hold — clamp (mutating ``target``
+                    # so the engines record the placed count)
+                    room = int(st.avail.sum())
+                    if w > room:
+                        w = room
+                        target[pos] = w
+                        if w == 0:
+                            continue
                 st.assign(Placement(jid, self.strategy.place(st, w)))
         moved = self._defrag(ids, now) if self.cluster.defrag else ()
-        upd = sorted(set(changed) | set(moved))
+        dirty: list[int] = []
+        if self.dirty:
+            live = {int(ids[p]): p for p in range(len(ids))}
+            dirty = [live[j] for j in self.dirty if j in live]
+            self.dirty.clear()
+        upd = sorted(set(changed) | set(moved) | set(dirty))
         factors = np.ones(len(upd))
         spans = np.zeros(len(upd), bool)
         for k, pos in enumerate(upd):
@@ -487,8 +627,12 @@ class PlacementEngine:
             own = dict(pl.assignment)
             cur_f, _ = self._job_factor(jid)
             best, best_f, best_left = -1, cur_f, None
+            av = st.avail      # == st.free (live array) while healthy
+            masked = av is not st.free
             for i in range(st.n_nodes):
-                left = int(st.free[i]) + own.get(i, 0) - w
+                if masked and not (st.ok[i] and not st.draining[i]):
+                    continue   # never consolidate onto a dead/draining node
+                left = int(av[i]) + own.get(i, 0) - w
                 if left < 0:
                     continue
                 f = self._assignment_factor(jid, (i,), False, w)
@@ -518,13 +662,18 @@ class PlacementEngine:
     def _assignment_factor(self, job_id: int, node_ids: tuple[int, ...],
                            spans: bool, w: int) -> float:
         """Speed multiplier a ``w``-gang on ``node_ids`` would run at."""
+        # synchronous training runs at the slowest straggler's pace;
+        # kept outside _gang_hw/_hw_cache (which do not key on mult)
+        mult = 1.0
+        if self.state.degraded:
+            mult = float(min(self.state.speed_mult[i] for i in node_ids))
         if not spans and self._uniform_hw:
-            return 1.0
+            return mult
         hw_eff = self._gang_hw(node_ids, spans)
         if hw_eff == self.cluster.hw:
-            return 1.0
+            return mult
         tab = self.spec_of[job_id].placement_factor(self.cluster, hw_eff)
-        return float(tab[w])
+        return mult * float(tab[w])
 
     def _gang_hw(self, node_ids: tuple[int, ...],
                  spans: bool) -> HardwareCoefficients:

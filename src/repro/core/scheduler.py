@@ -1685,6 +1685,87 @@ class PackPolicy(SchedulingPolicy):
         self.inner.validate(cluster)
 
 
+class RecoveryAwarePolicy(SchedulingPolicy):
+    """``recovery_aware``: SRTF ranking with fault-aware grants.
+
+    Two changes against blind srtf, both read off the PlacementView's
+    node-health snapshot (fault injection, ``repro.core.faults``):
+
+      * the total grant budget is the *surviving* (ok, non-draining)
+        capacity, not the nameplate — grants the placement engine would
+        clamp to dead nodes only churn restart freezes;
+      * every gang is clamped to the largest healthy full-speed node, so
+        gangs stay single-node: a node failure kills at most the gangs
+        actually on it instead of every ring spanning it, and straggling
+        (degraded) nodes are not sized into.
+
+    Off-placement there is no node snapshot and the policy degrades to
+    plain srtf ranking; on a fault-free placement cluster it packs like
+    ``pack_srtf`` (largest-node clamp, no health mask).
+    """
+
+    spec = "recovery_aware"
+
+    def allocate(self, state, cluster, now):
+        if state.live is not None:
+            # dense policy on a slotted view (ad-hoc callers, the
+            # delta-vs-dense harness — the engines always hand dense
+            # views): gather the live set and solve over it
+            ls = np.flatnonzero(state.live[state.lo:state.hi]) + state.lo
+            state = AllocView(
+                remaining=state.remaining[ls], tables=state.tables,
+                max_w=state.max_w[ls],
+                explore_started=state.explore_started[ls],
+                rows=ls if state.rows is None else state.rows[ls],
+                placement=state.placement)
+        n = state.n
+        cap = cluster.capacity
+        pv = state.placement
+        node_cap = 0
+        if pv is not None:
+            gpus = pv.node_gpus
+            if pv.ok is not None:
+                healthy = pv.ok & ~pv.draining
+                cap = min(cap, int(gpus[healthy].sum()))
+                pick = healthy & (pv.speed_mult >= 1.0)
+                if not pick.any():
+                    pick = healthy
+                node_cap = int(gpus[pick].max()) if pick.any() else 0
+            else:
+                node_cap = int(gpus.max())
+        target = np.zeros(n, np.int64)
+        if n == 0 or cap <= 0:
+            return target
+        W = state.tables.shape[1] - 1
+        tabs = (state.tables[:n] if state.rows is None
+                else state.tables[state.rows])
+        caps = np.minimum(state.max_w, W)
+        if node_cap:
+            caps = np.minimum(caps, node_cap)
+        wcap = min(int(caps.max()), W)
+        if wcap < 1:
+            return target
+        masked = np.where(np.arange(1, wcap + 1)[None, :] <= caps[:, None],
+                          tabs[:, 1:wcap + 1], 0.0)
+        w_star = np.argmax(masked, axis=1) + 1
+        f_best = masked[np.arange(n), w_star - 1]
+        t_best = state.remaining / np.maximum(f_best, 1e-12)
+        w_star = w_star.tolist()
+        # stable sort: FIFO order breaks remaining-time ties (like srtf)
+        for i in np.argsort(t_best, kind="stable").tolist():
+            if cap <= 0:
+                break
+            hi = min(int(caps[i]), cap)
+            if hi < 1:
+                continue
+            w = w_star[i]
+            if w > hi:      # clipped by remaining budget: re-derive
+                w = int(np.argmax(tabs[i, 1:hi + 1])) + 1
+            target[i] = w
+            cap -= w
+        return target
+
+
 def _parameterless(name: str, cls: type[SchedulingPolicy]):
     def factory(param: str | None) -> SchedulingPolicy:
         _no_param(name, param)
@@ -1702,6 +1783,8 @@ register_policy("srtf", _parameterless("srtf", SRTFPolicy))
 register_policy("optimus", _parameterless("optimus", OptimusPolicy))
 register_policy("utility_greedy",
                 _parameterless("utility_greedy", UtilityGreedyPolicy))
+register_policy("recovery_aware",
+                _parameterless("recovery_aware", RecoveryAwarePolicy))
 
 
 def _pack_factory(param: str | None) -> SchedulingPolicy:

@@ -118,6 +118,9 @@ class SimResult:
     # arrivals the admission rule turned away, and defrag gang moves
     rejected: tuple[int, ...] = ()
     migrations: int = 0
+    # fault injection (PR 10): gangs killed by node failures (0 on
+    # fault-free runs; compared by the engine-parity gates)
+    evictions: int = 0
     # end-of-run metrics rollup (``telemetry.TelemetryResult``) when the
     # run was telemetered (``simulate(..., telemetry=...)``), else None
     telemetry: object | None = None
@@ -516,6 +519,29 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
     pending = sorted(jobs, key=lambda j: j.arrival)
     n_jobs = len(pending)
     pi = 0                        # next-arrival cursor into `pending`
+    # Fault injection (PR 10): one deterministic incident tape per
+    # (cluster, fault_seed), delivered by a sorted cursor exactly like
+    # arrivals.  Empty on fault-free clusters — the per-event cost is a
+    # single int compare and the trajectory is bit-identical to pre-fault
+    # code (gated by the goldens).
+    fsched: tuple = ()
+    ckpt = None
+    if cluster.faults is not None:
+        from repro.core.faults import CheckpointPolicy, get_fault_model
+        horizon = pending[-1].arrival if pending else 0.0
+        fsched = get_fault_model(cluster.faults).schedule(
+            cluster, cluster.fault_seed, horizon)
+        ckpt = CheckpointPolicy(
+            interval=(cluster.checkpoint_interval
+                      if cluster.checkpoint_interval is not None
+                      else CheckpointPolicy.interval),
+            restart_cost=cluster.restart_cost)
+    nf = len(fsched)
+    fi = 0                        # next-fault cursor into `fsched`
+    requeue_rem: dict[int, float] = {}  # evicted job -> remaining at requeue
+    evictions = 0
+    # slots don't carry specs; eviction-requeue needs them back
+    spec_by_id = {j.job_id: j for j in jobs} if nf else None
     st = _SoAState(table_width=capacity + 1)
     # telemetry: one recorder per run; hot paths pay a single ``rec_on``
     # check when disabled (``rec`` is the module no-op singleton then)
@@ -557,7 +583,14 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
     run_set: set[int] = set()
     comm_n = 0
     fresh: list[int] = []
-    use_slotted = policy.slotted
+    # Under fault injection the applied allocation can be clamped below
+    # what the solver asked for (surviving capacity), and evictions can
+    # change membership without moving the (hi, done) static key — both
+    # silently diverge a slotted solver's persistent incremental state
+    # (or a static policy's cached target) from the engine's ground
+    # truth.  Churn runs force the stateless dense contract instead;
+    # fault-free runs keep every fast path (gated by the goldens).
+    use_slotted = policy.slotted and not nf
     # Below this run-set size the per-event estimate/advance/completion
     # pass runs as a scalar Python loop instead of vectorized numpy —
     # same IEEE-754 ops element by element (gather/divide/multiply/
@@ -660,7 +693,7 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
         return target
 
     p_allocate = policy.allocate
-    p_static = policy.static
+    p_static = policy.static and not nf
     slotted_fast = peng is None and use_slotted
     st_view = st.view
 
@@ -750,15 +783,18 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
                         rec.solve(now, len(changed), False, st.n)
                     else:
                         rec.solve_reused()
+                    oldw = st.w[ls[changed]].tolist()
+                upd, factors, spans = peng.apply(st.ids[ls], target,
+                                                 changed.tolist(), now)
+                # alloc events fire after apply: under faults the engine
+                # clamps grants to surviving capacity in-place, and the
+                # logged width must be what the gang actually got
+                if rec_on:
                     ids_ = st.ids
-                    gch = ls[changed]
-                    oldw = st.w[gch].tolist()
-                    for s, ov, nv in zip(gch.tolist(), oldw,
+                    for s, ov, nv in zip(ls[changed].tolist(), oldw,
                                          target[changed].tolist()):
                         rec.alloc(now, int(ids_[s]), ov, nv)
                 st.w[ls] = target
-                upd, factors, spans = peng.apply(st.ids[ls], target,
-                                                 changed.tolist(), now)
                 if not len(upd):
                     return
                 gi = ls[upd]
@@ -813,6 +849,8 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
         t_min = t
         if pi < n_jobs and pending[pi].arrival < t_min:
             t_min = pending[pi].arrival
+        if fi < nf and fsched[fi].t < t_min:
+            t_min = fsched[fi].t
         # completion estimates are recomputed from (now, remaining) every
         # event on purpose — see module docstring (bit-identical
         # trajectory); only the w>0 slice can run, so only it is scanned
@@ -950,6 +988,70 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
             else:
                 refresh_run_dense()
 
+        # --- faults ------------------------------------------------------
+        # incidents due at `now` fire after completions (a job that
+        # finished at the kill instant keeps its finish) and before
+        # arrivals/reallocation, so the next solve sees the shrunk
+        # cluster.  `fi < nf` is the only cost on fault-free runs.
+        faulted = False
+        while fi < nf and fsched[fi].t <= now + 1e-9:
+            fe = fsched[fi]
+            fi += 1
+            faulted = True
+            if rec_on:
+                rec.fault(now, fe.node, fe.kind)
+            if fe.kind == "fail":
+                victims = peng.fail(fe.node)
+                if victims:
+                    vset = set(victims)
+                    ids_ = st.ids
+                    remv = st.remaining
+                    # ascending live slots == reference active-list order
+                    vslots = [s for s in st.live_slots().tolist()
+                              if int(ids_[s]) in vset]
+                    evicted = []
+                    for s in vslots:
+                        jid = int(ids_[s])
+                        spec = spec_by_id[jid]
+                        done_p = spec.epochs - float(remv[s])
+                        lost = ckpt.lost_progress(done_p)
+                        evicted.append(
+                            (jid, spec, float(remv[s]) + lost, lost,
+                             lost / done_p if done_p > 0.0 else 0.0))
+                    st.remove(vslots)
+                    evictions += len(vslots)
+                    # killed gangs lose un-checkpointed progress and
+                    # re-enter through the normal admission path
+                    for jid, spec, new_rem, lost, lost_frac in evicted:
+                        if rec_on:
+                            rec.evict(now, jid, fe.node, lost, lost_frac)
+                        requeue_rem[jid] = new_rem
+                        verdict = peng.admit(spec, st.n, len(delayed), now)
+                        if verdict == "admit":
+                            s2 = st.add(spec, spec.speed_table(cluster),
+                                        now if policy.explores else None)
+                            st.remaining[s2] = requeue_rem.pop(jid)
+                            fresh.append(s2)
+                            peng.register(spec)
+                            if rec_on:
+                                rec.recover(now, jid)
+                        elif verdict == "reject":
+                            requeue_rem.pop(jid)
+                            rejected.append(jid)
+                            if rec_on:
+                                rec.reject(now, jid)
+                        else:
+                            delayed.append(spec)
+                            if rec_on:
+                                rec.delay(now, jid)
+                    refresh_run_dense()
+            elif fe.kind == "drain":
+                peng.drain(fe.node)
+            elif fe.kind == "recover":
+                peng.recover(fe.node)
+            else:
+                peng.degrade(fe.node, fe.factor)
+
         # --- arrivals ----------------------------------------------------
         arrived = False
         if delayed:
@@ -959,8 +1061,15 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
             for j in delayed:
                 verdict = peng.admit(j, st.n, len(still), now)
                 if verdict == "admit":
-                    fresh.append(st.add(j, j.speed_table(cluster),
-                                        now if policy.explores else None))
+                    s2 = st.add(j, j.speed_table(cluster),
+                                now if policy.explores else None)
+                    if requeue_rem:
+                        # evicted-then-delayed: resume from the rolled-back
+                        # progress, not from scratch
+                        rr = requeue_rem.pop(j.job_id, None)
+                        if rr is not None:
+                            st.remaining[s2] = rr
+                    fresh.append(s2)
                     peng.register(j)
                     arrived = True
                     if rec_on:
@@ -1011,7 +1120,7 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
 
         # --- reallocation ------------------------------------------------
         rescheduled = False
-        if arrived or finished or now + 1e-9 >= next_resched:
+        if arrived or finished or faulted or now + 1e-9 >= next_resched:
             if st.n:
                 if rec_on:
                     _t0 = perf_counter()
@@ -1037,7 +1146,8 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
         # rounding.  A trace that terminates without this guard never
         # runs even one repeated inert iteration, so every
         # previously-terminating trajectory is bit-identical.
-        if arrived or finished or popped or rescheduled or now > now0:
+        if (arrived or finished or faulted or popped or rescheduled
+                or now > now0):
             stall = 0
         else:
             stall += 1
@@ -1068,6 +1178,7 @@ def _simulate_table(jobs: list[JobSpec], cluster: ClusterModel,
                      arrival_times=arrivals, peak_concurrency=peak,
                      rejected=tuple(rejected),
                      migrations=0 if peng is None else peng.migrations,
+                     evictions=evictions,
                      telemetry=rec.finish(now))
 
 

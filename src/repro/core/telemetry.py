@@ -70,6 +70,13 @@ EVENT_SCHEMAS: dict[str, dict[str, type]] = {
     "unfreeze": {"t": float, "job": int},
     "migrate": {"t": float, "job": int, "node": int},
     "complete": {"t": float, "job": int, "jct": float},
+    # Fault injection (PR 10): a node incident, a gang killed by one
+    # (with its checkpoint-age-dependent lost work), and a killed gang
+    # re-entering the queue.
+    "fault": {"t": float, "node": int, "fault": str},
+    "evict": {"t": float, "job": int, "node": int, "lost": float,
+              "lost_frac": float},
+    "recover": {"t": float, "job": int},
     # Per-solve decision record.
     "solve": {"t": float, "policy": str, "changed": int, "reuse": bool, "n_live": int},
     # One per simulation, last event.
@@ -430,7 +437,28 @@ class ChromeTraceSink:
                 heapq.heappush(self._free, slot)
             if spans:
                 self._busy(t)
-        elif kind in ("freeze", "unfreeze", "migrate"):
+        elif kind == "evict":
+            # a node failure killed the gang: close its occupancy spans
+            # (same geometry as complete) and free the slots
+            job = ev["job"]
+            spans = self._held.pop(job, [])
+            for slot, since in spans:
+                pid, tid = self._pid_tid(slot)
+                self._write(
+                    {"ph": "X", "name": f"job{job}", "cat": "gang",
+                     "ts": since * 1e6, "dur": (t - since) * 1e6,
+                     "pid": pid, "tid": tid, "args": {"job": job}}
+                )
+                heapq.heappush(self._free, slot)
+            if spans:
+                self._busy(t)
+        elif kind == "fault":
+            self._write(
+                {"ph": "i", "name": ev["fault"], "ts": t * 1e6,
+                 "pid": ev["node"], "tid": 0, "s": "p",
+                 "args": {"node": ev["node"]}}
+            )
+        elif kind in ("freeze", "unfreeze", "migrate", "recover"):
             self._instant(t, ev["job"], kind)
         elif kind == "end":
             for job, spans in list(self._held.items()):
@@ -483,6 +511,14 @@ class TelemetryResult:
     n_rejected: int
     n_migrations: int
     avg_jct_s: float | None
+    # fault injection (PR 10): incidents seen, gangs killed, gpu-seconds
+    # wasted on rolled-back progress / restart freezes, and goodput =
+    # useful progress-seconds / busy gpu-seconds
+    n_faults: int = 0
+    n_evictions: int = 0
+    lost_gpu_seconds: float = 0.0
+    frozen_gpu_seconds: float = 0.0
+    goodput: float | None = None
     jct_histogram: dict[str, int] = field(default_factory=dict)  # log2 bins
     counters: dict[str, int] = field(default_factory=dict)
     timers: dict[str, dict[str, float]] = field(default_factory=dict)
@@ -508,6 +544,11 @@ class TelemetryResult:
             "n_rejected": self.n_rejected,
             "n_migrations": self.n_migrations,
             "avg_jct_s": self.avg_jct_s,
+            "n_faults": self.n_faults,
+            "n_evictions": self.n_evictions,
+            "lost_gpu_seconds": self.lost_gpu_seconds,
+            "frozen_gpu_seconds": self.frozen_gpu_seconds,
+            "goodput": self.goodput,
             "jct_histogram": dict(self.jct_histogram),
             "counters": dict(self.counters),
             "timers": dict(self.timers),
@@ -550,6 +591,8 @@ class Recorder:
         "_t", "_busy", "_waiting", "_busy_int", "_wait_int", "_peak_wait",
         "_w", "_sub", "_pend", "_pend_due", "_jct_hist", "_jct_sum",
         "_n_done", "_n_rejected", "_migs", "_closed",
+        "_gpu_int", "_gpu_t", "_frz", "_frz_s", "_lost",
+        "_n_evict", "_n_faults",
     )
 
     def __init__(
@@ -587,6 +630,18 @@ class Recorder:
         self._n_rejected = 0
         self._migs = 0
         self._closed = False
+        # goodput accounting (PR 10).  Per-job so same-timestamp event
+        # ordering differences between the engines cannot reorder the
+        # float sums: each job's events are chronological in both
+        # engines, and finish() folds the per-job values in sorted-key
+        # order — bitwise-equal totals on both engines.
+        self._gpu_int: dict[int, float] = {}  # job -> gpu-seconds so far
+        self._gpu_t: dict[int, float] = {}    # job -> last integral flush
+        self._frz: dict[int, tuple[float, int]] = {}  # job -> (until, w)
+        self._frz_s: dict[int, float] = {}    # job -> frozen gpu-seconds
+        self._lost: dict[int, float] = {}     # job -> wasted gpu-seconds
+        self._n_evict = 0
+        self._n_faults = 0
         if sink is not None:
             sink.emit(
                 {
@@ -670,12 +725,27 @@ class Recorder:
             self._enqueue(job)
             if self._pend.pop(job, None) is not None and self._pend:
                 self._pend_due = min(self._pend.values())
+        # per-job gpu-seconds integral (goodput): close the old-width span
+        if old_w > 0:
+            self._gpu_int[job] = (self._gpu_int.get(job, 0.0)
+                                  + (t - self._gpu_t.get(job, t)) * old_w)
+        self._gpu_t[job] = t
         self._w[job] = w
         if self._sink is not None:
             self._emit({"kind": "alloc", "t": t, "job": job, "old_w": old_w,
                         "w": w})
 
     def freeze(self, t: float, job: int, until: float) -> None:
+        # frozen gpu-seconds (goodput) — unconditional, unlike the
+        # sink-gated unfreeze bookkeeping below: the span is the union
+        # with any still-pending freeze, weighted by the job's current
+        # width
+        prev = self._frz.get(job)
+        add = (until - t) - (max(0.0, prev[0] - t) if prev else 0.0)
+        w = self._w.get(job, 0)
+        if add > 0.0 and w > 0:
+            self._frz_s[job] = self._frz_s.get(job, 0.0) + add * w
+        self._frz[job] = (until, w)
         sink = self._sink
         if sink is not None:
             if self._pend_due <= t:
@@ -697,6 +767,11 @@ class Recorder:
         self._busy -= w
         self._waiting.discard(job)
         self._pend.pop(job, None)
+        # done for good: the per-job goodput scratch is no longer needed
+        # (_lost/_frz_s persist — finish() sums them)
+        self._gpu_int.pop(job, None)
+        self._gpu_t.pop(job, None)
+        self._frz.pop(job, None)
         arrival = self._sub.pop(job, None)
         jct = t - arrival if arrival is not None else 0.0
         self._jct_sum += jct
@@ -705,6 +780,49 @@ class Recorder:
         self._n_done += 1
         if self._sink is not None:
             self._emit({"kind": "complete", "t": t, "job": job, "jct": jct})
+
+    # -- fault injection (PR 10) ------------------------------------------
+
+    def fault(self, t: float, node: int, fault: str) -> None:
+        """A node incident fired (fail/drain/recover/degrade)."""
+        self._n_faults += 1
+        self._emit({"kind": "fault", "t": float(t), "node": int(node),
+                    "fault": fault})
+
+    def evict(self, t: float, job: int, node: int, lost: float,
+              lost_frac: float) -> None:
+        """A node failure killed ``job``'s gang: release its GPUs, flush
+        its gpu-seconds integral, and charge the wasted share (the
+        fraction of its progress that rolled back to the last
+        checkpoint)."""
+        self._tick(t)
+        w = self._w.pop(job, 0)
+        self._busy -= w
+        self._waiting.discard(job)
+        if self._pend.pop(job, None) is not None and self._pend:
+            self._pend_due = min(self._pend.values())
+        if w > 0:
+            self._gpu_int[job] = (self._gpu_int.get(job, 0.0)
+                                  + (t - self._gpu_t.get(job, t)) * w)
+        self._gpu_t.pop(job, None)
+        if lost_frac > 0.0:
+            self._lost[job] = (self._lost.get(job, 0.0)
+                               + self._gpu_int.get(job, 0.0) * lost_frac)
+        frz = self._frz.pop(job, None)
+        if frz is not None and frz[0] > t:
+            # the freeze was cut short by the kill — claw back the tail
+            self._frz_s[job] = (self._frz_s.get(job, 0.0)
+                                - (frz[0] - t) * frz[1])
+        self._n_evict += 1
+        self._emit({"kind": "evict", "t": float(t), "job": int(job),
+                    "node": int(node), "lost": float(lost),
+                    "lost_frac": float(lost_frac)})
+
+    def recover(self, t: float, job: int) -> None:
+        """An evicted job re-entered the queue through admission."""
+        self._tick(t)
+        self._enqueue(job)
+        self._emit({"kind": "recover", "t": float(t), "job": int(job)})
 
     # -- decision records -------------------------------------------------
 
@@ -746,6 +864,13 @@ class Recorder:
                 self._closed = True
         denom = self.capacity * t
         util = (self._busy_int / denom) if denom > 0 else None
+        # goodput: fold per-job values in sorted-key order so both
+        # engines sum bitwise-identically
+        lost = sum(self._lost[j] for j in sorted(self._lost))
+        frozen = sum(self._frz_s[j] for j in sorted(self._frz_s))
+        goodput = (max(0.0, (self._busy_int - lost - frozen)
+                       / self._busy_int)
+                   if self._busy_int > 0 else None)
         return TelemetryResult(
             policy=self.policy,
             capacity=self.capacity,
@@ -759,6 +884,11 @@ class Recorder:
             n_rejected=self._n_rejected,
             n_migrations=self._migs,
             avg_jct_s=(self._jct_sum / self._n_done) if self._n_done else None,
+            n_faults=self._n_faults,
+            n_evictions=self._n_evict,
+            lost_gpu_seconds=lost,
+            frozen_gpu_seconds=frozen,
+            goodput=goodput,
             jct_histogram=dict(sorted(self._jct_hist.items())),
             counters=self.registry.counters(),
             timers=self.registry.timers(),
@@ -799,6 +929,15 @@ class _NullRecorder:
         pass
 
     def complete(self, t, job):
+        pass
+
+    def fault(self, t, node, fault):
+        pass
+
+    def evict(self, t, job, node, lost, lost_frac):
+        pass
+
+    def recover(self, t, job):
         pass
 
     def solve(self, t, changed, reuse, n_live):
@@ -901,6 +1040,12 @@ def metrics_rollup(events: list[dict]) -> TelemetryResult:
             rec.migrate(t, ev["job"], ev["node"])
         elif kind == "complete":
             rec.complete(t, ev["job"])
+        elif kind == "fault":
+            rec.fault(t, ev["node"], ev["fault"])
+        elif kind == "evict":
+            rec.evict(t, ev["job"], ev["node"], ev["lost"], ev["lost_frac"])
+        elif kind == "recover":
+            rec.recover(t, ev["job"])
         elif kind == "solve":
             rec.solve(t, ev["changed"], ev["reuse"], ev["n_live"])
         elif kind == "end":
